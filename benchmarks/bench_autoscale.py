@@ -1,0 +1,48 @@
+"""Paper Fig. 16: the provisioner scales the cloud GPU pool with a dynamic
+workload (more cameras -> more chunks/s), holding latency."""
+from __future__ import annotations
+
+from repro.core.bandwidth import CLOUD
+from repro.serving.autoscaler import Autoscaler
+from repro.serving.executor import Executor
+from repro.serving.registry import FunctionRegistry
+
+from benchmarks.common import BenchContext
+
+
+def run(ctx: BenchContext, quick: bool = False):
+    reg = FunctionRegistry()
+    reg.register("detect_chunk", lambda n: n, kind="inference")
+    ex = Executor("cloud", reg, CLOUD, num_devices=1)
+    scaler = Autoscaler(min_devices=1, max_devices=8, cooldown_s=1.0)
+
+    # workload: chunks/s ramps 2 -> 16 -> 4 (cameras added then removed)
+    phases = [(0.0, 10.0, 2), (10.0, 20.0, 16), (20.0, 30.0, 4)]
+    chunk_time = 8 / CLOUD.detect_fps        # 8 frames per chunk
+
+    rows = []
+    queue = 0
+    devices = 1
+    t = 0.0
+    for start, end, rate in phases:
+        t = start
+        while t < end:
+            queue += rate                    # arrivals this second
+            capacity = devices / chunk_time  # chunks servable per second
+            served = min(queue, int(capacity))
+            queue -= served
+            devices = scaler.decide(t, queue, devices)
+            ex.scale_to(devices)
+            latency = (queue / max(capacity, 1e-9)) + chunk_time
+            if int(t) % 2 == 0:
+                rows.append({"name": f"t{int(t):02d}", "us_per_call": "",
+                             "rate": rate, "queue": queue,
+                             "devices": devices,
+                             "latency_s": f"{latency:.2f}"})
+            t += 1.0
+    peak = max(int(r["devices"]) for r in rows)
+    rows.append({"name": "summary", "us_per_call": "",
+                 "peak_devices": peak,
+                 "scaled_up": peak > 1,
+                 "scaled_down": int(rows[-1]["devices"]) < peak})
+    return rows

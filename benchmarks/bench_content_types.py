@@ -1,0 +1,23 @@
+"""Paper Fig. 12: per-content-type bandwidth, normalized to DDS (=1.0)."""
+from __future__ import annotations
+
+from repro.baselines import DDSBaseline
+from repro.configs.vpaas_video import CLASSIFIER, DETECTOR
+from repro.core.protocol import HighLowProtocol
+
+from benchmarks.common import BenchContext
+
+
+def run(ctx: BenchContext, quick: bool = False):
+    datasets = ctx.datasets(chunks_per_type=1 if quick else 3, frames=8)
+    vpaas = HighLowProtocol(DETECTOR, CLASSIFIER)
+    dds = DDSBaseline(DETECTOR)
+    rows = []
+    for ds_name, chunks in datasets.items():
+        for i, ch in enumerate(chunks):
+            v = vpaas.process_chunk(ctx.det_params, ctx.clf_params, ch.frames)
+            d = dds.process_chunk(ctx.det_params, ch.frames)
+            ratio = (v.wan_bytes + v.coord_bytes) / max(d.wan_bytes, 1e-9)
+            rows.append({"name": f"{ds_name}/video{i}", "us_per_call": "",
+                         "vpaas_over_dds_bandwidth": f"{ratio:.3f}"})
+    return rows

@@ -1,0 +1,32 @@
+"""Paper Fig. 10a: normalized cloud cost (serverless per-frame billing,
+c_F = p_F * n* * rounds)."""
+from __future__ import annotations
+
+from repro.baselines import CloudSegBaseline, DDSBaseline
+from repro.configs.vpaas_video import CLASSIFIER, DETECTOR
+from repro.core.protocol import HighLowProtocol
+
+from benchmarks.common import BenchContext
+
+
+def run(ctx: BenchContext, quick: bool = False):
+    datasets = ctx.datasets(chunks_per_type=1, frames=8)
+    chunks = [c for cs in datasets.values() for c in cs]
+    vpaas = HighLowProtocol(DETECTOR, CLASSIFIER)
+    cloudseg = CloudSegBaseline(DETECTOR)
+    dds = DDSBaseline(DETECTOR)
+
+    cost = {"vpaas": 0.0, "cloudseg": 0.0, "dds": 0.0}
+    for ch in chunks:
+        r = vpaas.process_chunk(ctx.det_params, ctx.clf_params, ch.frames)
+        cost["vpaas"] += vpaas.cloud_cost(r)
+        rc = cloudseg.process_chunk(ctx.det_params, ch.frames)
+        cost["cloudseg"] += cloudseg.cost_model.cost(rc.cloud_frames)
+        rd = dds.process_chunk(ctx.det_params, ch.frames)
+        cost["dds"] += rd.cloud_frames * rd.cloud_rounds
+
+    ref = cost["vpaas"]
+    return [{"name": k, "us_per_call": "",
+             "cloud_cost": f"{v:.1f}",
+             "cost_norm_to_vpaas": f"{v / max(ref, 1e-9):.2f}"}
+            for k, v in cost.items()]

@@ -1,0 +1,47 @@
+"""Paper Fig. 4: the model profiler — quality-control and inference
+throughput per device tier (client / fog / cloud profiles), plus measured
+CPU wall-times for this host."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.vpaas_video import CLASSIFIER, DETECTOR
+from repro.core.bandwidth import PROFILES
+from repro.models import classifier as clf_mod
+from repro.models import detector as det_mod
+from repro.video import codec, synthetic
+
+from benchmarks.common import BenchContext, timeit
+
+
+def run(ctx: BenchContext, quick: bool = False):
+    rows = []
+    for name, prof in PROFILES.items():
+        rows.append({"name": f"profile/{name}", "us_per_call": "",
+                     "encode_fps": prof.encode_fps,
+                     "detect_fps": prof.detect_fps,
+                     "classify_fps": prof.classify_fps})
+
+    # measured on this host (informational)
+    rng = np.random.default_rng(0)
+    ch = synthetic.make_chunk(rng, "traffic", num_frames=4)
+    frames = jnp.asarray(ch.frames)
+    codec.encode(frames, 0.8, 36).frames.block_until_ready()
+    us_enc = timeit(lambda: codec.encode(frames, 0.8, 36)
+                    .frames.block_until_ready())
+    det_mod.detect(DETECTOR, ctx.det_params, frames)["boxes"].block_until_ready()
+    us_det = timeit(lambda: det_mod.detect(
+        DETECTOR, ctx.det_params, frames)["boxes"].block_until_ready())
+    crops = jnp.asarray(rng.random((16, *CLASSIFIER.crop_hw, 3)),
+                        jnp.float32)
+    clf_mod.classify(CLASSIFIER, ctx.clf_params, crops)["scores"].block_until_ready()
+    us_clf = timeit(lambda: clf_mod.classify(
+        CLASSIFIER, ctx.clf_params, crops)["scores"].block_until_ready())
+    rows.append({"name": "measured_cpu/encode_4f",
+                 "us_per_call": f"{us_enc:.0f}"})
+    rows.append({"name": "measured_cpu/detect_4f",
+                 "us_per_call": f"{us_det:.0f}"})
+    rows.append({"name": "measured_cpu/classify_16crops",
+                 "us_per_call": f"{us_clf:.0f}"})
+    return rows

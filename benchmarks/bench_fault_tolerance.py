@@ -1,0 +1,40 @@
+"""Paper Fig. 15: cloud outage -> fog fallback -> recovery timeline."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.vpaas_video import CLASSIFIER, DETECTOR
+from repro.core.coordinator import CloudFogCoordinator
+from repro.core.protocol import HighLowProtocol
+from repro.video import synthetic
+from repro.video.metrics import F1Accumulator
+
+from benchmarks.common import BenchContext
+
+
+def run(ctx: BenchContext, quick: bool = False):
+    rng = np.random.default_rng(15)
+    n = 6 if quick else 10
+    chunks = [synthetic.make_chunk(rng, "traffic", num_frames=4)
+              for _ in range(n)]
+    outage = (n // 3, 2 * n // 3)
+
+    proto = HighLowProtocol(DETECTOR, CLASSIFIER)
+    coord = CloudFogCoordinator(proto, ctx.det_params, ctx.clf_params,
+                                fallback_params=ctx.fallback_params)
+    rows = []
+    for i, ch in enumerate(chunks):
+        coord.network.up = not (outage[0] <= i < outage[1])
+        res = coord.process_chunk(ch, learn=False)
+        acc = F1Accumulator()
+        for t in range(ch.frames.shape[0]):
+            keep = res.valid[t]
+            acc.update(res.boxes[t][keep], res.labels[t][keep],
+                       ch.gt_boxes[t], ch.gt_labels[t])
+        rows.append({"name": f"t{i}", "us_per_call": "",
+                     "mode": coord.fault.mode,
+                     "f1": f"{acc.f1:.3f}",
+                     "latency_s": f"{res.latency.total:.3f}"})
+    rows.append({"name": "events", "us_per_call": "",
+                 "events": "|".join(e["event"] for e in coord.fault.events)})
+    return rows

@@ -1,0 +1,67 @@
+"""Paper Fig. 13: (a) accuracy vs human labor budget under data drift;
+(b) HITL training overhead on the serving path."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.vpaas_video import CLASSIFIER, DETECTOR
+from repro.core.coordinator import CloudFogCoordinator
+from repro.core.incremental import IncrementalLearner
+from repro.core.protocol import HighLowProtocol
+from repro.video import synthetic
+
+from benchmarks.common import BenchContext
+
+DRIFT = 1.0   # full band swap: the appearance-migration scenario
+
+
+def _chunks(n, seed):
+    rng = np.random.default_rng(seed)
+    return [synthetic.drifted_chunk(rng, "traffic", drift=DRIFT,
+                                    num_frames=4) for _ in range(n)]
+
+
+def run(ctx: BenchContext, quick: bool = False):
+    budgets = [0, 64, 192, 384] if not quick else [0, 128]
+    warm_n, test_n = (6, 3) if not quick else (3, 2)
+    rows = []
+    for budget in budgets:
+        proto = HighLowProtocol(DETECTOR, CLASSIFIER)
+        learner = IncrementalLearner(num_classes=CLASSIFIER.num_classes,
+                                     trigger=16, budget=budget,
+                                     rule="proximal") if budget else None
+        coord = CloudFogCoordinator(proto, ctx.det_params, ctx.clf_params,
+                                    fallback_params=ctx.fallback_params,
+                                    learner=learner)
+        if budget:
+            coord.run(_chunks(warm_n, 31), learn=True)
+        out = coord.run(_chunks(test_n, 97), learn=False)
+        rows.append({"name": f"budget_{budget}", "us_per_call": "",
+                     "f1": f"{out.f1['f1']:.3f}",
+                     "labels_used": (out.learner_summary or {}).get(
+                         "labels_used", 0),
+                     "updates": (out.learner_summary or {}).get(
+                         "updates", 0)})
+
+    # (b) overhead: wall time of one chunk with vs without a model update
+    proto = HighLowProtocol(DETECTOR, CLASSIFIER)
+    learner = IncrementalLearner(num_classes=CLASSIFIER.num_classes,
+                                 trigger=1, budget=10_000, rule="proximal")
+    coord = CloudFogCoordinator(proto, ctx.det_params, ctx.clf_params,
+                                fallback_params=ctx.fallback_params,
+                                learner=learner)
+    chunk = _chunks(1, 7)[0]
+    coord.process_chunk(chunk, learn=False)     # warm the jit caches
+    t0 = time.perf_counter()
+    coord.process_chunk(chunk, learn=False)
+    t_serve = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    coord.process_chunk(chunk, learn=True)      # triggers an update
+    t_with_train = time.perf_counter() - t0
+    rows.append({"name": "overhead", "us_per_call": f"{t_serve * 1e6:.0f}",
+                 "serve_only_s": f"{t_serve:.3f}",
+                 "with_update_s": f"{t_with_train:.3f}",
+                 "overhead_frac": f"{(t_with_train - t_serve) / max(t_serve, 1e-9):.2f}"})
+    return rows

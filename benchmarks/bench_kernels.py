@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks: jnp-oracle wall time on CPU (the interpret-mode
+Pallas path validates correctness, not speed — noted in derived fields)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+from benchmarks.common import BenchContext, timeit
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run(ctx: BenchContext, quick: bool = False):
+    rows = []
+    shapes = [(1, 512, 8, 2, 64)] if quick else [
+        (1, 512, 8, 2, 64), (2, 1024, 8, 8, 128)]
+    for (b, s, nq, nkv, d) in shapes:
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, s, nq, d), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (b, s, nkv, d), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, s, nkv, d), jnp.bfloat16)
+        fn = jax.jit(lambda q, k, v: ref.flash_attention(q, k, v))
+        fn(q, k, v).block_until_ready()
+        us = timeit(lambda: fn(q, k, v).block_until_ready())
+        flops = 4 * b * s * s * nq * d / 2
+        rows.append({"name": f"flash_ref/b{b}s{s}h{nq}d{d}",
+                     "us_per_call": f"{us:.0f}",
+                     "gflops_s": f"{flops / us / 1e3:.1f}",
+                     "note": "jnp oracle; pallas targets TPU"})
+
+    # decode attention
+    b, S, nq, nkv, d = 4, 4096, 8, 2, 128
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, nq, d), jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (b, S, nkv, d), jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (b, S, nkv, d), jnp.bfloat16)
+    fn = jax.jit(lambda q, kc, vc: ref.decode_attention(
+        q, kc, vc, jnp.asarray(S, jnp.int32)))
+    fn(q, kc, vc).block_until_ready()
+    us = timeit(lambda: fn(q, kc, vc).block_until_ready())
+    cache_gb = 2 * b * S * nkv * d * 2 / 1e9
+    rows.append({"name": f"decode_ref/b{b}S{S}", "us_per_call": f"{us:.0f}",
+                 "cache_gb_per_step": f"{cache_gb:.3f}"})
+
+    # SSD scan
+    b, s, h, p, n = 2, 1024, 8, 64, 64
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    fn = jax.jit(lambda *a: ref.ssd_scan(*a, chunk=128)[0])
+    fn(x, dt, A, B, C).block_until_ready()
+    us = timeit(lambda: fn(x, dt, A, B, C).block_until_ready())
+    rows.append({"name": f"ssd_ref/b{b}s{s}h{h}", "us_per_call": f"{us:.0f}"})
+
+    # IoU filter
+    na, nb = 256, 256
+    ka, kb = jax.random.split(KEY)
+    pa = jax.random.uniform(ka, (na, 4))
+    pb = jax.random.uniform(kb, (nb, 4))
+    fn = jax.jit(ref.iou_matrix)
+    fn(pa, pb).block_until_ready()
+    us = timeit(lambda: fn(pa, pb).block_until_ready())
+    rows.append({"name": f"iou_ref/{na}x{nb}", "us_per_call": f"{us:.0f}"})
+    return rows

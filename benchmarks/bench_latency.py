@@ -1,0 +1,54 @@
+"""Paper Fig. 10b (latency percentiles per system) + Fig. 11 (latency under
+different WAN bandwidths)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines import CloudSegBaseline, DDSBaseline, MPEGBaseline
+from repro.configs.vpaas_video import CLASSIFIER, DETECTOR
+from repro.core.bandwidth import NetworkModel
+from repro.core.protocol import HighLowProtocol
+
+from benchmarks.common import BenchContext
+
+
+def _latencies(system, ctx, chunks, is_vpaas):
+    out = []
+    for ch in chunks:
+        if is_vpaas:
+            res = system.process_chunk(ctx.det_params, ctx.clf_params,
+                                       ch.frames)
+        else:
+            res = system.process_chunk(ctx.det_params, ch.frames)
+        out.append(res.latency.total)
+    return np.asarray(out)
+
+
+def run(ctx: BenchContext, quick: bool = False):
+    datasets = ctx.datasets(chunks_per_type=1 if quick else 2, frames=8)
+    chunks = [c for cs in datasets.values() for c in cs]
+    rows = []
+
+    systems = {
+        "mpeg": (MPEGBaseline(DETECTOR), False),
+        "cloudseg": (CloudSegBaseline(DETECTOR), False),
+        "dds": (DDSBaseline(DETECTOR), False),
+        "vpaas": (HighLowProtocol(DETECTOR, CLASSIFIER), True),
+    }
+    for name, (system, is_vpaas) in systems.items():
+        lat = _latencies(system, ctx, chunks, is_vpaas)
+        rows.append({"name": f"latency/{name}", "us_per_call": "",
+                     "p50_s": f"{np.percentile(lat, 50):.3f}",
+                     "p95_s": f"{np.percentile(lat, 95):.3f}",
+                     "mean_s": f"{lat.mean():.3f}"})
+
+    # Fig. 11: VPaaS latency under [10, 15, 20] Mbps WAN
+    for mbps in [10, 15, 20]:
+        proto = HighLowProtocol(DETECTOR, CLASSIFIER,
+                                network=NetworkModel(wan_mbps=mbps))
+        lat = _latencies(proto, ctx, chunks[:3], True)
+        rows.append({"name": f"bw_sensitivity/vpaas_{mbps}mbps",
+                     "us_per_call": "",
+                     "p50_s": f"{np.percentile(lat, 50):.3f}",
+                     "mean_s": f"{lat.mean():.3f}"})
+    return rows

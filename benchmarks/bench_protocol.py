@@ -1,0 +1,65 @@
+"""Paper Fig. 9: normalized bandwidth + F1 per system per dataset (the
+macro benchmark).  MPEG bandwidth = 1.0 reference."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines import (CloudSegBaseline, DDSBaseline, GlimpseBaseline,
+                             MPEGBaseline)
+from repro.configs.vpaas_video import CLASSIFIER, DETECTOR
+from repro.core.protocol import HighLowProtocol, detections_for_metrics
+from repro.video.metrics import F1Accumulator
+
+from benchmarks.common import BenchContext, timeit
+
+
+def _evaluate(system, det_params, clf_params, chunks, is_vpaas):
+    acc = F1Accumulator()
+    total_bytes = 0.0
+    us = None
+    for ch in chunks:
+        if is_vpaas:
+            res = system.process_chunk(det_params, clf_params, ch.frames)
+            if us is None:
+                us = timeit(system.process_chunk, det_params, clf_params,
+                            ch.frames, repeats=1)
+            getter = lambda t, r=res: detections_for_metrics(r, t)
+            total_bytes += res.wan_bytes + res.coord_bytes
+        else:
+            res = system.process_chunk(det_params, ch.frames)
+            if us is None:
+                us = timeit(system.process_chunk, det_params, ch.frames,
+                            repeats=1)
+            getter = lambda t, r=res: r.detections(t)
+            total_bytes += res.wan_bytes
+        for t in range(ch.frames.shape[0]):
+            boxes, labels = getter(t)
+            acc.update(boxes, labels, ch.gt_boxes[t], ch.gt_labels[t])
+    return acc.f1, total_bytes, us
+
+
+def run(ctx: BenchContext, quick: bool = False):
+    datasets = ctx.datasets(chunks_per_type=1 if quick else 2, frames=8)
+    systems = {
+        "mpeg": (MPEGBaseline(DETECTOR), False),
+        "glimpse": (GlimpseBaseline(DETECTOR), False),
+        "cloudseg": (CloudSegBaseline(DETECTOR), False),
+        "dds": (DDSBaseline(DETECTOR), False),
+        "vpaas": (HighLowProtocol(DETECTOR, CLASSIFIER), True),
+    }
+    rows = []
+    for ds_name, chunks in datasets.items():
+        ref_bytes = None
+        for sys_name, (system, is_vpaas) in systems.items():
+            f1, nbytes, us = _evaluate(system, ctx.det_params,
+                                       ctx.clf_params, chunks, is_vpaas)
+            if sys_name == "mpeg":
+                ref_bytes = nbytes
+            rows.append({
+                "name": f"{ds_name}/{sys_name}",
+                "us_per_call": f"{us:.0f}",
+                "f1": f"{f1:.3f}",
+                "bandwidth_bytes": f"{nbytes:.0f}",
+                "bandwidth_norm": f"{nbytes / max(ref_bytes, 1e-9):.3f}",
+            })
+    return rows

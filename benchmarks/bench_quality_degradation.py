@@ -1,0 +1,68 @@
+"""Paper Fig. 5 / Key Observations 1-2: localization survives quality
+degradation, classification does not."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.common import threshold_detections
+from repro.configs.vpaas_video import CLASSIFIER, DETECTOR
+from repro.models import classifier as clf_mod
+from repro.models import detector as det_mod
+from repro.video import codec, synthetic
+from repro.video.metrics import iou_np, localization_recall
+
+from benchmarks.common import BenchContext, timeit
+
+QUALITIES = [("hq", 1.0, 10), ("mid", 0.8, 26), ("low", 0.8, 36),
+             ("vlow", 0.5, 40)]
+
+
+def run(ctx: BenchContext, quick: bool = False):
+    rng = np.random.default_rng(42)
+    chunks = [synthetic.make_chunk(rng, "traffic", num_frames=4)
+              for _ in range(2 if quick else 4)]
+    rows = []
+    for tag, r, q in QUALITIES:
+        locs, cls_ok, cls_n = [], 0, 0
+        us = None
+        for ch in chunks:
+            f = jnp.asarray(ch.frames)
+            enc = codec.encode(f, r, q)
+            det = det_mod.detect(DETECTOR, ctx.det_params, enc.frames)
+            if us is None:
+                us = timeit(lambda: det_mod.detect(
+                    DETECTOR, ctx.det_params, enc.frames)["boxes"]
+                    .block_until_ready())
+            boxes = np.asarray(det["boxes"])
+            pred = np.asarray(det["cls_probs"]).argmax(-1)
+            _, _, locv = threshold_detections(det, 0.5, 0.0)
+            for t in range(ch.frames.shape[0]):
+                locs.append(localization_recall(
+                    boxes[t][locv[t]], ch.gt_boxes[t], ch.gt_labels[t]))
+                gt = ch.gt_boxes[t][ch.gt_labels[t] >= 0]
+                gl = ch.gt_labels[t][ch.gt_labels[t] >= 0]
+                if len(gt):
+                    iou = iou_np(boxes[t], gt)
+                    for j in range(len(gt)):
+                        i = iou[:, j].argmax()
+                        if iou[i, j] >= 0.5:
+                            cls_n += 1
+                            cls_ok += int(pred[t][i] == gl[j])
+        rows.append({"name": f"keyobs2/{tag}", "us_per_call": f"{us:.0f}",
+                     "r": r, "q": q,
+                     "loc_recall": f"{np.mean(locs):.3f}",
+                     "cls_acc": f"{cls_ok / max(cls_n, 1):.3f}"})
+
+    # fog classifier on HQ vs LQ crops (Key Obs 1 / Fig 7b)
+    from repro.training.data import classifier_batches
+    batch = next(classifier_batches(CLASSIFIER, 128, seed=99))
+    for tag, r, q in [("hq", 1.0, 4), ("low", 0.8, 36)]:
+        crops = jnp.asarray(batch["crops"])
+        if tag != "hq":
+            crops = codec.encode(crops, r, q).frames
+        out = clf_mod.classify(CLASSIFIER, ctx.clf_params, crops)
+        acc = float((np.asarray(out["pred"]) == batch["labels"]).mean())
+        rows.append({"name": f"fog_classifier/{tag}", "us_per_call": "",
+                     "acc": f"{acc:.3f}"})
+    return rows

@@ -1,0 +1,75 @@
+"""Shared benchmark context: trained video models (load-or-train), datasets,
+timing helpers, CSV emission."""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.configs.vpaas_video import (CLASSIFIER, DETECTOR,
+                                       FALLBACK_DETECTOR)
+from repro.models import classifier as clf_mod
+from repro.models import detector as det_mod
+from repro.models import schema as sch
+from repro.training import checkpoint
+from repro.training.train_loop import train_classifier, train_detector
+from repro.video import synthetic
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+@dataclass
+class BenchContext:
+    det_params: object
+    clf_params: object
+    fallback_params: object
+
+    def datasets(self, chunks_per_type: int = 2, frames: int = 8,
+                 seed: int = 2024) -> Dict[str, List[synthetic.VideoChunk]]:
+        return {name: synthetic.dataset(seed + i, name, chunks_per_type,
+                                        num_frames=frames)
+                for i, name in enumerate(synthetic.CONTENT_TYPES)}
+
+
+def load_context() -> BenchContext:
+    """Load trained checkpoints; train from scratch if missing."""
+    def load_or_train(tag, schema_fn, cfg, train_fn, **kw):
+        path = os.path.join(ART, tag)
+        like = sch.abstract(schema_fn(cfg))
+        try:
+            return checkpoint.restore(path, like)
+        except (FileNotFoundError, KeyError, ValueError):
+            params, _ = train_fn(cfg, **kw)
+            checkpoint.save(path, params, {"trained_by": "benchmarks"})
+            return params
+
+    det = load_or_train("det_params", det_mod.detector_schema, DETECTOR,
+                        train_detector, steps=500, batch_size=16)
+    clf = load_or_train("clf_params", clf_mod.classifier_schema, CLASSIFIER,
+                        train_classifier, steps=400, batch_size=64)
+    fb = load_or_train("fallback_params", det_mod.detector_schema,
+                       FALLBACK_DETECTOR, train_detector, steps=200,
+                       batch_size=16, degrade=False)
+    return BenchContext(det, clf, fb)
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, **kw) -> float:
+    """Median wall time in microseconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(rows: List[Dict], prefix: str) -> None:
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    for row in rows:
+        name = f"{prefix}/{row.pop('name')}"
+        us = row.pop("us_per_call", "")
+        derived = ";".join(f"{k}={v}" for k, v in row.items())
+        print(f"{name},{us},{derived}")

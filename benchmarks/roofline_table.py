@@ -1,0 +1,87 @@
+"""§Roofline: assemble the full baseline table from artifacts/dryrun/*.json.
+
+Also computes the flash/SSD kernel-adjusted memory term: the jnp reference
+lowering materializes attention scores / SSD chunk decay matrices that the
+Pallas kernels keep in VMEM; the adjustment subtracts that analytic traffic
+so the memory term reflects the TPU deployment (both values are reported).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.specs import arch_for_shape
+from repro.roofline.hw import TPU_V5E
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+ART_BASE = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "dryrun_baseline")
+ART_OPT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "dryrun_opt")
+
+
+def kernel_adjustment_bytes(arch: str, shape_name: str, chips: int) -> float:
+    """Per-device bytes of score/decay traffic that Pallas keeps in VMEM."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = arch_for_shape(get_config(arch), shape)
+    if shape.mode == "decode":
+        return 0.0           # decode refs don't materialize s^2 tensors
+    b, s = shape.global_batch, shape.seq_len
+    passes = 3.0 if shape.mode == "train" else 1.0  # fwd+remat+bwd vs fwd
+    accesses = 4.0           # logits w+r, probs w+r
+    total = 0.0
+    kinds = (list(cfg.prefix_layers)
+             + list(cfg.block_pattern) * cfg.num_blocks
+             + list(cfg.suffix_layers))
+    for kind in kinds:
+        if kind in ("attn", "moe", "cross", "shared_attn", "local"):
+            s_kv = min(s, cfg.sliding_window) if kind == "local" else s
+            # causal: half the score matrix is live on average
+            total += (b * cfg.num_heads * s * s_kv * 0.5 * 4
+                      * accesses * passes)
+        if kind in ("ssm", "ssm_ffn"):
+            q = cfg.ssm_chunk
+            nc = -(-s // q)
+            total += (b * nc * cfg.n_ssm_heads * q * q * 4
+                      * accesses * passes)
+    return total / chips
+
+
+def load_rows(mesh: str = "16x16", art: str = None) -> List[Dict]:
+    rows = []
+    for d in ([art] if art else [ART_OPT, ART_BASE, ART]):
+        paths = sorted(glob.glob(os.path.join(d, f"*_{mesh}.json")))
+        if paths:
+            for path in paths:
+                with open(path) as f:
+                    rows.append(json.load(f))
+            return rows
+    return rows
+
+
+def run(ctx=None, quick: bool = False):
+    out = []
+    variants = [("opt", ART_OPT), ("baseline", ART_BASE)]
+    for mesh in ["16x16", "2x16x16"]:
+      for label, art in variants:
+        for r in load_rows(mesh, art=art):
+            adj = kernel_adjustment_bytes(r["arch"], r["shape"], r["chips"])
+            mem_adj = max(r["hlo_bytes"] - adj, 0.0) / TPU_V5E.hbm_bandwidth
+            terms = {"compute": r["t_compute"], "memory": mem_adj,
+                     "collective": r["t_collective"]}
+            dominant = max(terms, key=terms.get)
+            out.append({
+                "name": f"{label}/{mesh}/{r['arch']}/{r['shape']}",
+                "us_per_call": "",
+                "t_compute_ms": f"{r['t_compute'] * 1e3:.2f}",
+                "t_memory_ms": f"{r['t_memory'] * 1e3:.2f}",
+                "t_memory_kerneladj_ms": f"{mem_adj * 1e3:.2f}",
+                "t_collective_ms": f"{r['t_collective'] * 1e3:.2f}",
+                "dominant": dominant,
+                "useful_flops_ratio": f"{r['useful_flops_ratio']:.2f}",
+                "peak_mem_gb": f"{(r.get('temp_bytes_per_device', 0) + r.get('arg_bytes_per_device', 0)) / 1e9:.1f}",
+            })
+    return out

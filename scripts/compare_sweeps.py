@@ -1,0 +1,29 @@
+"""Baseline vs optimized sweep comparison (single-pod)."""
+import glob, json, os, sys
+
+def load(d):
+    out = {}
+    for p in glob.glob(os.path.join(d, "*_16x16.json")):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+base = load("artifacts/dryrun_baseline")
+opt = load("artifacts/dryrun_opt")
+print(f"| arch | shape | compute b->o (ms) | memory b->o (ms) | collective b->o (ms) | useful b->o |")
+print("|---|---|---|---|---|---|")
+tot_b = tot_o = 0.0
+for key in sorted(base):
+    b, o = base[key], opt.get(key)
+    if not o:
+        continue
+    fmt = lambda r, k: r[f"t_{k}"] * 1e3
+    sb = max(fmt(b, "compute"), fmt(b, "memory"), fmt(b, "collective"))
+    so = max(fmt(o, "compute"), fmt(o, "memory"), fmt(o, "collective"))
+    tot_b += sb; tot_o += so
+    print(f"| {key[0]} | {key[1]} | {fmt(b,'compute'):.1f} -> {fmt(o,'compute'):.1f} "
+          f"| {fmt(b,'memory'):.0f} -> {fmt(o,'memory'):.0f} "
+          f"| {fmt(b,'collective'):.1f} -> {fmt(o,'collective'):.1f} "
+          f"| {b['useful_flops_ratio']:.2f} -> {o['useful_flops_ratio']:.2f} |")
+print(f"\nsum of dominant terms: baseline {tot_b/1e3:.1f} s -> optimized {tot_o/1e3:.1f} s "
+      f"({tot_b/tot_o:.2f}x)")

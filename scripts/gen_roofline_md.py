@@ -1,0 +1,25 @@
+"""Generate the §Roofline markdown table from artifacts/dryrun/*.json."""
+import sys
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+from benchmarks.roofline_table import load_rows, kernel_adjustment_bytes
+from repro.roofline.hw import TPU_V5E
+
+def emit(mesh):
+    rows = load_rows(mesh)
+    print(f"\n### Mesh {mesh} ({'512 chips, 2 pods' if mesh=='2x16x16' else '256 chips, 1 pod'})\n")
+    print("| arch | shape | compute (ms) | memory raw/adj (ms) | collective (ms) | dominant | useful | peak GB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        adj = kernel_adjustment_bytes(r["arch"], r["shape"], r["chips"])
+        mem_adj = max(r["hlo_bytes"] - adj, 0.0) / TPU_V5E.hbm_bandwidth
+        terms = {"compute": r["t_compute"], "memory": mem_adj,
+                 "collective": r["t_collective"]}
+        dom = max(terms, key=terms.get)
+        peak = (r.get("temp_bytes_per_device", 0) + r.get("arg_bytes_per_device", 0)) / 1e9
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f} | "
+              f"{r['t_memory']*1e3:.0f} / {mem_adj*1e3:.0f} | "
+              f"{r['t_collective']*1e3:.1f} | {dom} | "
+              f"{r['useful_flops_ratio']:.2f} | {peak:.1f} |")
+
+emit("16x16")
+emit("2x16x16")

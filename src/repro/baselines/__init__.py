@@ -1,0 +1,5 @@
+from repro.baselines.common import BaselineResult  # noqa: F401
+from repro.baselines.mpeg import MPEGBaseline  # noqa: F401
+from repro.baselines.glimpse import GlimpseBaseline  # noqa: F401
+from repro.baselines.cloudseg import CloudSegBaseline  # noqa: F401
+from repro.baselines.dds import DDSBaseline  # noqa: F401

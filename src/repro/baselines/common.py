@@ -1,0 +1,49 @@
+"""Shared result structure + detection post-processing for baselines."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.vpaas_video import DetectorConfig
+from repro.core.bandwidth import LatencyBreakdown
+from repro.models import detector as det_mod
+
+
+@dataclass
+class BaselineResult:
+    boxes: np.ndarray            # (F, N, 4)
+    labels: np.ndarray           # (F, N)
+    valid: np.ndarray            # (F, N) bool
+    wan_bytes: float
+    cloud_frames: int
+    cloud_rounds: float          # billing rounds (DDS > 1, CloudSeg uses x2)
+    latency: LatencyBreakdown
+
+    def detections(self, frame: int) -> Tuple[np.ndarray, np.ndarray]:
+        keep = self.valid[frame]
+        return self.boxes[frame][keep], self.labels[frame][keep]
+
+
+def threshold_detections(det, theta_loc: float = 0.5,
+                         theta_cls: float = 0.5, nms_iou: float = 0.45):
+    """Plain cloud-only acceptance rule (+NMS) for baseline detectors."""
+    import jax
+    from repro.kernels import ops
+
+    loc = np.asarray(det["loc_scores"])
+    probs = np.asarray(det["cls_probs"])
+    boxes = np.asarray(det["boxes"])
+    labels = probs.argmax(-1).astype(np.int64)
+    valid = (loc >= theta_loc) & (probs.max(-1) >= theta_cls)
+    keep = jax.vmap(lambda b, s, v: ops.nms_mask(
+        b, s, v, iou_threshold=nms_iou))(
+        det["boxes"], det["loc_scores"] * det["cls_probs"].max(-1),
+        jnp.asarray(valid))
+    return boxes, labels, np.asarray(keep)
+
+
+def run_detector(det_cfg: DetectorConfig, det_params, frames) -> dict:
+    return det_mod.detect(det_cfg, det_params, jnp.asarray(frames))

@@ -1,0 +1,21 @@
+"""Mamba2-2.7B — attention-free SSD state-space model. [arXiv:2405.21060]"""
+from repro.configs.base import SSM, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    block_pattern=(SSM,),
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    conv_kernel=4,
+    tie_embeddings=True,
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,88 @@
+"""Bandwidth, RTT and cloud-cost models (paper Eq. 2, §VI metrics).
+
+Bytes are *derived* from the codec (F_v(r, q)); time and cost are modelled
+from device/network profiles calibrated to the paper's Fig. 4 measurements.
+The profiles are plain data: deployments override them with measured numbers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """Throughput profile of one tier (paper Fig. 4)."""
+    name: str
+    encode_fps: float            # quality-control (re-encode) throughput
+    detect_fps: float            # heavy detector inference
+    classify_fps: float          # lightweight classifier (per crop batch)
+
+    def encode_time(self, frames: int) -> float:
+        return frames / self.encode_fps
+
+    def detect_time(self, frames: int) -> float:
+        return frames / self.detect_fps
+
+    def classify_time(self, crops: int) -> float:
+        return crops / self.classify_fps
+
+
+# Calibrated to paper Fig. 4: the Pi cannot re-encode in real time; the
+# Xavier-class fog runs quality control + classifiers fast but detectors
+# slowly; the V100-class cloud runs everything fast.
+CLIENT = DeviceProfile("client-rpi4", encode_fps=9.0, detect_fps=0.4,
+                       classify_fps=25.0)
+FOG = DeviceProfile("fog-xavier", encode_fps=120.0, detect_fps=8.0,
+                    classify_fps=450.0)
+CLOUD = DeviceProfile("cloud-v100", encode_fps=900.0, detect_fps=75.0,
+                      classify_fps=3500.0)
+
+PROFILES: Dict[str, DeviceProfile] = {p.name: p for p in (CLIENT, FOG, CLOUD)}
+
+
+@dataclass
+class NetworkModel:
+    """Client/fog <-> cloud WAN and client <-> fog LAN links."""
+    wan_mbps: float = 15.0       # paper micro-benchmark sweeps [10, 15, 20]
+    wan_rtt_s: float = 0.04
+    lan_mbps: float = 10000.0    # 10 Gbps co-located switch (paper testbed)
+    lan_rtt_s: float = 0.001
+    up: bool = True              # False simulates the Fig. 15 outage
+
+    def wan_time(self, nbytes: float) -> float:
+        return self.wan_rtt_s + nbytes * 8.0 / (self.wan_mbps * 1e6)
+
+    def lan_time(self, nbytes: float) -> float:
+        return self.lan_rtt_s + nbytes * 8.0 / (self.lan_mbps * 1e6)
+
+
+@dataclass
+class CostModel:
+    """Serverless per-request billing: c_F = p_F * n* (paper §VI)."""
+    price_per_cloud_frame: float = 1.0    # normalized units
+    extra_model_multiplier: float = 1.0   # CloudSeg runs 2 models -> 2.0
+
+    def cost(self, cloud_frames: int, rounds: float = 1.0) -> float:
+        return (self.price_per_cloud_frame * cloud_frames * rounds
+                * self.extra_model_multiplier)
+
+
+@dataclass
+class LatencyBreakdown:
+    quality_control: float = 0.0
+    transmission: float = 0.0
+    cloud_inference: float = 0.0
+    fog_inference: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return (self.quality_control + self.transmission
+                + self.cloud_inference + self.fog_inference)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"quality_control": self.quality_control,
+                "transmission": self.transmission,
+                "cloud_inference": self.cloud_inference,
+                "fog_inference": self.fog_inference,
+                "total": self.total}

@@ -1,0 +1,103 @@
+"""The High-Low protocol generalized to LLM serving (beyond-paper, §2 of
+DESIGN.md): confidence-routed big-little cascade with Eq. 8 online
+adaptation of the fog model's head.
+
+Mapping from the paper's video pipeline:
+
+  cloud detector on low-quality frames  ->  big model on the request
+  confident boxes accepted directly     ->  high-margin tokens accepted
+  uncertain regions -> fog classifier   ->  low-margin requests answered by
+                                            the little (fog) model are
+                                            escalated to the big model
+  HITL + Eq. 8 last-layer updates       ->  online logit-bias adapter on the
+                                            fog model's unembedding, updated
+                                            from big-model (or human) labels
+
+The adapter is a per-vocab logit bias b (the "last layer" W restricted to
+its bias row — same Eq. 4 proximal structure), so fog adaptation costs O(V)
+per update and ships to fog nodes for free (the paper's model-cache update).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+
+@dataclass
+class CascadeConfig:
+    escalate_below: float = 0.55     # min top-token prob before escalation
+    eta: float = 0.3                 # Eq. 4/8 proximal step size
+    adapter_decay: float = 0.999     # proximal pull toward zero bias
+
+
+@dataclass
+class CascadeStats:
+    fog_answered: int = 0
+    escalated: int = 0
+    adapter_updates: int = 0
+    agreement: List[float] = field(default_factory=list)
+
+    @property
+    def escalation_rate(self) -> float:
+        total = self.fog_answered + self.escalated
+        return self.escalated / max(total, 1)
+
+
+class BigLittleCascade:
+    """Serve with the little model; escalate low-confidence requests."""
+
+    def __init__(self, little_cfg: ModelConfig, little_params,
+                 big_cfg: ModelConfig, big_params,
+                 ccfg: CascadeConfig = CascadeConfig()):
+        self.little_cfg, self.little_params = little_cfg, little_params
+        self.big_cfg, self.big_params = big_cfg, big_params
+        self.ccfg = ccfg
+        self.logit_bias = jnp.zeros((little_cfg.vocab_size,), jnp.float32)
+        self.stats = CascadeStats()
+
+        self._little_fwd = jax.jit(
+            lambda p, t, b: tfm.forward(little_cfg, p, t)[0] + b[None, None])
+        self._big_fwd = jax.jit(lambda p, t: tfm.forward(big_cfg, p, t)[0])
+
+    # ------------------------------------------------------------------
+    def answer(self, tokens: np.ndarray) -> Tuple[np.ndarray, Dict]:
+        """Next-token prediction for a batch (b, s); routes per request."""
+        toks = jnp.asarray(tokens, jnp.int32)
+        little_logits = self._little_fwd(self.little_params, toks,
+                                         self.logit_bias)[:, -1]
+        probs = jax.nn.softmax(little_logits, axis=-1)
+        conf = np.asarray(jnp.max(probs, axis=-1))
+        pred = np.asarray(jnp.argmax(little_logits, axis=-1))
+
+        escalate = conf < self.ccfg.escalate_below
+        info = {"confidence": conf, "escalated": escalate}
+        if escalate.any():
+            big_logits = self._big_fwd(self.big_params, toks)[:, -1]
+            big_pred = np.asarray(jnp.argmax(big_logits, axis=-1))
+            # big-model answers play the "human/golden" feedback role:
+            # update the fog adapter on every escalated instance (Eq. 4)
+            for i in np.nonzero(escalate)[0]:
+                self.update_adapter(little_logits[i], int(big_pred[i]))
+            agree = (pred[escalate] == big_pred[escalate]).mean()
+            self.stats.agreement.append(float(agree))
+            pred = np.where(escalate, big_pred, pred)
+        self.stats.fog_answered += int((~escalate).sum())
+        self.stats.escalated += int(escalate.sum())
+        return pred, info
+
+    # ------------------------------------------------------------------
+    def update_adapter(self, little_logits: jax.Array, label: int) -> None:
+        """Eq. 4 proximal step on the logit-bias adapter:
+        b <- decay*b - eta * (softmax(logits + b) - onehot(label))."""
+        probs = jax.nn.softmax(little_logits + 0.0)   # bias already applied
+        grad = probs - jax.nn.one_hot(label, probs.shape[-1])
+        self.logit_bias = (self.ccfg.adapter_decay * self.logit_bias
+                           - self.ccfg.eta * grad)
+        self.stats.adapter_updates += 1

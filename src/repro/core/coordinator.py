@@ -1,0 +1,139 @@
+"""Cloud-fog coordinator: executes the selected policy across tiers, drives
+the HITL loop, and handles failover (§III.C fog server coordinator).
+
+This is the orchestration layer gluing protocol + serving substrate:
+  * policy execution (HighLow / baselines via PolicyManager)
+  * incremental-learning loop (collect -> human label -> Eq. 8 update ->
+    model-cache refresh on fog)
+  * fault tolerance (cloud outage -> fog fallback detector)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.vpaas_video import (ClassifierConfig, DetectorConfig,
+                                       FALLBACK_DETECTOR)
+from repro.core.bandwidth import NetworkModel
+from repro.core.hitl import BACKGROUND, OracleAnnotator
+from repro.core.incremental import IncrementalLearner
+from repro.core.protocol import ChunkResult, HighLowProtocol
+from repro.models import detector as det_mod
+from repro.serving.fault import FaultTolerantCoordinator
+from repro.serving.monitor import Monitor
+from repro.video.metrics import F1Accumulator
+
+
+@dataclass
+class CoordinatorResult:
+    f1: Dict[str, float]
+    bandwidth: float
+    cloud_cost: float
+    latencies: List[float]
+    modes: List[str]
+    learner_summary: Dict[str, float]
+
+
+class CloudFogCoordinator:
+    """End-to-end driver: chunks in, detections + metrics + learning out."""
+
+    def __init__(self, protocol: HighLowProtocol, det_params, clf_params,
+                 *, fallback_params=None, learner: IncrementalLearner = None,
+                 annotator: OracleAnnotator = None,
+                 network: NetworkModel = None, monitor: Monitor = None):
+        self.protocol = protocol
+        self.det_params = det_params
+        self.clf_params = clf_params
+        self.fallback_params = fallback_params
+        self.learner = learner
+        self.annotator = annotator or OracleAnnotator()
+        self.network = network or protocol.network
+        self.monitor = monitor or Monitor()
+        self.fault = FaultTolerantCoordinator(self.network)
+        self.W = np.asarray(clf_params["W"])
+        self.clock = 0.0
+
+    # ------------------------------------------------------------------
+    def _fog_fallback(self, frames: np.ndarray) -> ChunkResult:
+        """Cloud is down: run the small fog detector locally (Fig. 15)."""
+        import jax.numpy as jnp
+
+        from repro.baselines.common import threshold_detections
+        from repro.core.bandwidth import LatencyBreakdown
+
+        det = det_mod.detect(FALLBACK_DETECTOR, self.fallback_params,
+                             jnp.asarray(frames))
+        boxes, labels, valid = threshold_detections(det, 0.5, 0.25)
+        f = frames.shape[0]
+        lat = LatencyBreakdown(
+            fog_inference=self.protocol.fog.detect_time(f))
+        n = boxes.shape[1]
+        return ChunkResult(
+            boxes=boxes, labels=labels, valid=valid,
+            source=np.full((f, n), 2), wan_bytes=0.0, coord_bytes=0.0,
+            cloud_frames=0, latency=lat,
+            fog_features=np.zeros((f, n, 1)), prop_boxes=boxes,
+            prop_valid=np.zeros((f, n), bool),
+            fog_scores=np.zeros((f, n, 1)))
+
+    # ------------------------------------------------------------------
+    def process_chunk(self, chunk, *, learn: bool = True) -> ChunkResult:
+        import jax.numpy as jnp
+
+        def cloud_path():
+            return self.protocol.process_chunk(
+                self.det_params, self.clf_params, chunk.frames,
+                W=jnp.asarray(self.W))
+
+        res, mode = self.fault.route(self.clock, cloud_path,
+                                     lambda: self._fog_fallback(chunk.frames))
+        self.monitor.record("latency", res.latency.total, self.clock)
+        self.monitor.record("wan_bytes", res.wan_bytes, self.clock)
+        self.monitor.incr("cloud_frames", res.cloud_frames)
+        self.clock += res.latency.total
+
+        # ---- HITL incremental learning (§V) ----
+        if (learn and self.learner is not None and mode == "cloud"
+                and not self.learner.budget_exhausted):
+            self._collect_feedback(chunk, res)
+            newW, updated = self.learner.maybe_update(jnp.asarray(self.W))
+            if updated:
+                self.W = np.asarray(newW)   # fog model-cache refresh
+                self.monitor.incr("model_updates")
+        return res
+
+    def _collect_feedback(self, chunk, res: ChunkResult) -> None:
+        for t in range(chunk.frames.shape[0]):
+            idx = np.nonzero(res.prop_valid[t])[0]
+            if not len(idx):
+                continue
+            labels = self.annotator.label_regions(
+                res.prop_boxes[t][idx], chunk.gt_boxes[t], chunk.gt_labels[t])
+            for i, lab in zip(idx, labels):
+                if lab != BACKGROUND:
+                    self.learner.collect(res.fog_features[t, i], int(lab))
+
+    # ------------------------------------------------------------------
+    def run(self, chunks, *, learn: bool = True) -> CoordinatorResult:
+        f1 = F1Accumulator()
+        lats, modes = [], []
+        total_bytes = 0.0
+        cost = 0.0
+        for chunk in chunks:
+            res = self.process_chunk(chunk, learn=learn)
+            for t in range(chunk.frames.shape[0]):
+                keep = res.valid[t]
+                f1.update(res.boxes[t][keep], res.labels[t][keep],
+                          chunk.gt_boxes[t], chunk.gt_labels[t])
+            lats.append(res.latency.total)
+            modes.append(self.fault.mode)
+            total_bytes += res.wan_bytes + res.coord_bytes
+            cost += self.protocol.cloud_cost(res)
+        learner_summary = {}
+        if self.learner is not None:
+            learner_summary = {"labels_used": self.learner.labels_used,
+                               "updates": self.learner.updates_done}
+        return CoordinatorResult(f1.summary(), total_bytes, cost, lats,
+                                 modes, learner_summary)

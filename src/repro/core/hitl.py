@@ -1,0 +1,59 @@
+"""Human-in-the-loop simulation: the annotator frontend of §V / Fig. 8.
+
+The paper's human operator checks cropped regions and corrects wrong labels.
+Here ground truth from the synthetic dataset plays the oracle; a labelling
+budget and a per-label cost model the limited "human labor budget" tau.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.video.metrics import iou_np
+
+BACKGROUND = -1
+
+
+@dataclass
+class OracleAnnotator:
+    """Assigns ground-truth labels to cropped regions (IoU matching)."""
+    iou_threshold: float = 0.4
+    labels_provided: int = 0
+
+    def label_regions(
+        self,
+        boxes: np.ndarray,          # (N, 4) proposal boxes (one frame)
+        gt_boxes: np.ndarray,       # (M, 4)
+        gt_labels: np.ndarray,      # (M,)
+    ) -> np.ndarray:
+        """Returns (N,) labels; BACKGROUND where no gt matches."""
+        keep = gt_labels >= 0
+        gt_b, gt_l = gt_boxes[keep], gt_labels[keep]
+        out = np.full(len(boxes), BACKGROUND, np.int64)
+        if len(gt_b) and len(boxes):
+            iou = iou_np(np.asarray(boxes), gt_b)
+            best = iou.argmax(axis=1)
+            hit = iou[np.arange(len(boxes)), best] >= self.iou_threshold
+            out[hit] = gt_l[best[hit]]
+        self.labels_provided += int(len(boxes))
+        return out
+
+
+@dataclass
+class FeedbackQueue:
+    """Data collector (§III.D): buffers (crop, prediction) pairs for review."""
+    max_size: int = 4096
+    items: List[Tuple[np.ndarray, np.ndarray, int]] = None
+
+    def __post_init__(self):
+        self.items = []
+
+    def push(self, features: np.ndarray, box: np.ndarray, pred: int) -> None:
+        if len(self.items) < self.max_size:
+            self.items.append((features, box, pred))
+
+    def drain(self) -> List[Tuple[np.ndarray, np.ndarray, int]]:
+        out, self.items = self.items, []
+        return out

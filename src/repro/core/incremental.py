@@ -1,0 +1,173 @@
+"""§V human-in-the-loop incremental learning — Eqs. (3)-(9), faithfully.
+
+Only the last layer W of the fog classifier moves (one-vs-all heads, bias
+absorbed by the appended 1-feature).  Two update rules are provided:
+
+  * ``update_eq8``      — the paper's closed-form proximal step, Eq. (8):
+        W_t = W_{t-1} - eta * y_t * (1 / sigma(W_{t-1}^T x_t)) * x_t
+                                                 if W_{t-1}^T x_t > 0
+        W_t = W_{t-1}                            otherwise
+    with sigma = ReLU, applied column-wise per one-vs-all head.  A small
+    epsilon guards the 1/sigma pole (the paper leaves this implicit).
+
+  * ``update_proximal`` — the Eq. (4) objective solved with the exact
+    gradient of sigmoid-BCE instead of the paper's ReLU approximation
+    (beyond-paper 'robust' mode; same proximal structure, no pole).
+
+Snapshots {W_t} are ensembled with ridge weights omega per Eq. (9).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Single-instance updates
+# ---------------------------------------------------------------------------
+def update_eq8(W: jax.Array, x: jax.Array, y_onehot: jax.Array,
+               eta: float = 0.05, eps: float = 1e-2) -> jax.Array:
+    """Paper Eq. (8). W (d+1, C); x (d+1,) with trailing 1; y one-hot (C,)."""
+    pre = x @ W                                       # (C,) = W^T x
+    sig = jnp.maximum(pre, 0.0)                       # sigma = ReLU
+    grad_scale = y_onehot / jnp.maximum(sig, eps)     # y_t / sigma(W^T x)
+    delta = -eta * jnp.outer(x, grad_scale)           # (d+1, C)
+    return jnp.where(pre[None, :] > 0.0, W + delta, W)
+
+
+def update_proximal(W: jax.Array, x: jax.Array, y_onehot: jax.Array,
+                    eta: float = 0.5) -> jax.Array:
+    """Eq. (4) with exact sigmoid-BCE gradient (robust variant).
+
+    argmin_W 0.5 ||W - W_{t-1}||_F^2 + eta * l(f(x_t), y_t)
+    one gradient step at W_{t-1}:  W_t = W_{t-1} - eta * x (f - y)^T.
+    """
+    probs = jax.nn.sigmoid(x @ W)                     # one-vs-all
+    return W - eta * jnp.outer(x, probs - y_onehot)
+
+
+def batch_update(W: jax.Array, xs: jax.Array, ys: jax.Array,
+                 rule: str = "eq8", eta: float = 0.05,
+                 passes: int = 1) -> jax.Array:
+    """Sequentially apply the per-instance rule over a labelled batch.
+
+    ``passes > 1`` replays the buffer (still per-instance updates; the
+    paper's Eq. 8 is the single-pass case)."""
+    fn = {"eq8": update_eq8, "proximal": update_proximal}[rule]
+
+    def step(w, xy):
+        x, y = xy
+        return fn(w, x, y, eta), None
+
+    for _ in range(max(passes, 1)):
+        W, _ = jax.lax.scan(step, W, (xs, ys))
+    return W
+
+
+# ---------------------------------------------------------------------------
+# Ensemble weighting — Eq. (9)
+# ---------------------------------------------------------------------------
+def ensemble_weights(
+    snapshots: jax.Array,        # (tau, d+1, C) classifier snapshots {W_t}
+    xs: jax.Array,               # (N, d+1) labelled features (reused, §V)
+    ys: jax.Array,               # (N, C) one-hot labels
+    v: float = 1e-2,
+) -> jax.Array:
+    """Ridge solution of Eq. (9): omega = (A + vI)^{-1} b with
+    A[t,t'] = sum_i <f_t(x_i), f_t'(x_i)>, b[t] = sum_i <f_t(x_i), y_i>."""
+    z = jax.nn.sigmoid(jnp.einsum("nd,tdc->tnc", xs, snapshots))  # (tau,N,C)
+    A = jnp.einsum("tnc,snc->ts", z, z)
+    b = jnp.einsum("tnc,nc->t", z, ys)
+    tau = snapshots.shape[0]
+    omega = jnp.linalg.solve(A + v * jnp.eye(tau), b)
+    return omega
+
+
+def ensemble_predict(snapshots: jax.Array, omega: jax.Array,
+                     xs: jax.Array) -> jax.Array:
+    """Weighted-combined prediction over snapshot classifiers."""
+    z = jax.nn.sigmoid(jnp.einsum("nd,tdc->tnc", xs, snapshots))
+    return jnp.einsum("t,tnc->nc", omega, z)
+
+
+# ---------------------------------------------------------------------------
+# The stateful learner used by the platform's auto-training backend
+# ---------------------------------------------------------------------------
+@dataclass
+class IncrementalLearner:
+    """Data collector + model trainer of the auto-training backend (§III.D).
+
+    Buffers human-labelled features; every ``trigger`` labels performs one
+    incremental update (Eq. 8 / proximal) and records a snapshot for the
+    Eq. (9) ensemble.  ``budget`` is the paper's human-labor budget tau.
+    """
+    num_classes: int
+    rule: str = "proximal"
+    eta: float = 0.3
+    passes: int = 2
+    trigger: int = 16
+    budget: int = 512
+    keep_snapshots: int = 8
+
+    labels_used: int = 0
+    updates_done: int = 0
+    _xs: List[np.ndarray] = field(default_factory=list)
+    _ys: List[np.ndarray] = field(default_factory=list)
+    _all_xs: List[np.ndarray] = field(default_factory=list)
+    _all_ys: List[np.ndarray] = field(default_factory=list)
+    snapshots: List[np.ndarray] = field(default_factory=list)
+    omega: Optional[np.ndarray] = None
+
+    @property
+    def budget_exhausted(self) -> bool:
+        return self.labels_used >= self.budget
+
+    def collect(self, x: np.ndarray, label: int) -> bool:
+        """Add one human-labelled instance; True if it was accepted."""
+        if self.budget_exhausted:
+            return False
+        self._xs.append(np.asarray(x))
+        y = np.zeros(self.num_classes, np.float32)
+        y[label] = 1.0
+        self._ys.append(y)
+        self._all_xs.append(np.asarray(x))
+        self._all_ys.append(y)
+        self.labels_used += 1
+        return True
+
+    def maybe_update(self, W: jax.Array) -> Tuple[jax.Array, bool]:
+        """Run Eq. (8)/(4) over the buffered batch when the trigger fires."""
+        if len(self._xs) < self.trigger and not (
+                self.budget_exhausted and self._xs):
+            return W, False
+        xs = jnp.asarray(np.stack(self._xs))
+        ys = jnp.asarray(np.stack(self._ys))
+        W_new = batch_update(W, xs, ys, rule=self.rule, eta=self.eta,
+                             passes=self.passes)
+        self._xs.clear()
+        self._ys.clear()
+        self.updates_done += 1
+        self.snapshots.append(np.asarray(W_new))
+        self.snapshots = self.snapshots[-self.keep_snapshots:]
+        return W_new, True
+
+    def fit_ensemble(self, v: float = 1e-2) -> Optional[np.ndarray]:
+        """Eq. (9) over collected data once the budget is exhausted."""
+        if len(self.snapshots) < 2 or not self._all_xs:
+            return None
+        snaps = jnp.asarray(np.stack(self.snapshots))
+        xs = jnp.asarray(np.stack(self._all_xs))
+        ys = jnp.asarray(np.stack(self._all_ys))
+        self.omega = np.asarray(ensemble_weights(snaps, xs, ys, v=v))
+        return self.omega
+
+    def predict(self, xs: jax.Array) -> jax.Array:
+        """Ensemble prediction if omega is fit, else latest snapshot."""
+        snaps = jnp.asarray(np.stack(self.snapshots))
+        if self.omega is not None:
+            return ensemble_predict(snaps, jnp.asarray(self.omega), xs)
+        return jax.nn.sigmoid(xs @ snaps[-1])

@@ -1,0 +1,160 @@
+"""High-and-Low Video Streaming — the paper's §IV protocol.
+
+One chunk flows client -> fog -> cloud -> fog:
+
+  1. client ships HQ video to the co-located fog (LAN; negligible bytes
+     against the WAN budget),
+  2. fog re-encodes to LOW quality (r_low, q_low) and ships that to the
+     cloud (the only WAN upload — this is the bandwidth win),
+  3. the cloud detector returns (a) confident detections, accepted directly
+     as labels, and (b) coordinates of uncertain regions (bytes ~ 0),
+  4. the fog crops the uncertain regions from its cached HQ frames and
+     classifies them with the lightweight one-vs-all pipeline (no extra
+     cloud cost — RQ2), dynamic batching included,
+  5. crops + predictions are queued for the §V HITL loop.
+
+The jit'd compute path is fixed-shape; orchestration (bytes, latency, cost
+accounting) happens at trace boundaries.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.vpaas_video import ClassifierConfig, DetectorConfig
+from repro.core import regions as reg
+from repro.core.bandwidth import (CLOUD, FOG, CostModel, DeviceProfile,
+                                  LatencyBreakdown, NetworkModel)
+from repro.models import classifier as clf_mod
+from repro.models import detector as det_mod
+from repro.video import codec
+
+
+@dataclass(frozen=True)
+class ProtocolConfig:
+    # quality control (paper §VI settings: first-round QP 36, RS 0.8)
+    r_low: float = 0.8
+    q_low: int = 36
+    # §IV.B filter thresholds
+    theta_cls: float = 0.85
+    theta_loc: float = 0.5
+    theta_iou: float = 0.3
+    theta_back: float = 0.5
+    # fog classifier acceptance
+    fog_min_conf: float = 0.5
+    # closed-loop inter-frame coding (H.264-faithful temporal compression)
+    inter_coding: bool = True
+    impl: str = "ref"
+
+
+@dataclass
+class ChunkResult:
+    boxes: np.ndarray            # (F, N, 4) final detections
+    labels: np.ndarray           # (F, N)
+    valid: np.ndarray            # (F, N) bool
+    source: np.ndarray           # (F, N) 0=cloud-accepted 1=fog-classified
+    wan_bytes: float
+    coord_bytes: float
+    cloud_frames: int
+    latency: LatencyBreakdown
+    # HITL hand-off
+    fog_features: np.ndarray     # (F, N, d+1)
+    prop_boxes: np.ndarray       # (F, N, 4)
+    prop_valid: np.ndarray       # (F, N)
+    fog_scores: np.ndarray       # (F, N, C)
+
+
+# ---------------------------------------------------------------------------
+# jit'd compute core
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("det_cfg", "clf_cfg", "pcfg"))
+def _compute(det_cfg: DetectorConfig, clf_cfg: ClassifierConfig,
+             pcfg: ProtocolConfig, det_params, clf_params, W,
+             frames_hq: jax.Array):
+    # fog: re-encode to low quality  (quality control stage)
+    enc = (codec.encode_inter if pcfg.inter_coding else codec.encode)(
+        frames_hq, pcfg.r_low, pcfg.q_low)
+
+    # cloud: heavy detector on LOW-quality frames
+    det = det_mod.detect(det_cfg, det_params, enc.frames)
+
+    # cloud: split into accepted labels vs uncertain coordinates
+    split = reg.split_regions(
+        det, theta_cls=pcfg.theta_cls, theta_loc=pcfg.theta_loc,
+        theta_iou=pcfg.theta_iou, theta_back=pcfg.theta_back, impl=pcfg.impl)
+
+    # fog: crop HQ frames at uncertain coordinates, classify one-vs-all
+    crops = reg.crop_batch(frames_hq, split.prop_boxes, clf_cfg.crop_hw)
+    f, n = crops.shape[0], crops.shape[1]
+    flat = crops.reshape(f * n, *crops.shape[2:])
+    out = clf_mod.classify(clf_cfg, clf_params, flat, W=W)
+    fog_scores = out["scores"].reshape(f, n, -1)
+    fog_feats = out["features"].reshape(f, n, -1)
+
+    fog_labels = jnp.argmax(fog_scores, axis=-1).astype(jnp.int32)
+    fog_conf = jnp.max(fog_scores, axis=-1)
+    fog_valid = split.prop_valid & (fog_conf >= pcfg.fog_min_conf)
+
+    # merge: cloud-accepted + fog-classified
+    labels = jnp.where(split.acc_valid, split.acc_labels, fog_labels)
+    valid = split.acc_valid | fog_valid
+    source = jnp.where(split.acc_valid, 0, 1).astype(jnp.int32)
+    coord_bytes = reg.coordinate_bytes(split)
+    return (split.acc_boxes, labels, valid, source, enc.nbytes, coord_bytes,
+            fog_feats, split.prop_boxes, split.prop_valid, fog_scores)
+
+
+# ---------------------------------------------------------------------------
+# Protocol driver with bytes / latency / cost accounting
+# ---------------------------------------------------------------------------
+@dataclass
+class HighLowProtocol:
+    det_cfg: DetectorConfig
+    clf_cfg: ClassifierConfig
+    pcfg: ProtocolConfig = field(default_factory=ProtocolConfig)
+    network: NetworkModel = field(default_factory=NetworkModel)
+    cost_model: CostModel = field(default_factory=CostModel)
+    fog: DeviceProfile = FOG
+    cloud: DeviceProfile = CLOUD
+
+    def process_chunk(self, det_params, clf_params, frames_hq: np.ndarray,
+                      W=None) -> ChunkResult:
+        fhq = jnp.asarray(frames_hq)
+        (boxes, labels, valid, source, wan_bytes, coord_bytes, feats,
+         prop_boxes, prop_valid, fog_scores) = _compute(
+            self.det_cfg, self.clf_cfg, self.pcfg, det_params, clf_params,
+            W if W is not None else clf_params["W"], fhq)
+
+        f = frames_hq.shape[0]
+        n_crops = int(np.sum(np.asarray(prop_valid)))
+        lat = LatencyBreakdown(
+            quality_control=self.fog.encode_time(f),
+            transmission=(self.network.wan_time(float(wan_bytes))
+                          + self.network.wan_time(float(coord_bytes))),
+            cloud_inference=self.cloud.detect_time(f),
+            fog_inference=self.fog.classify_time(max(n_crops, 1)),
+        )
+        return ChunkResult(
+            boxes=np.asarray(boxes), labels=np.asarray(labels),
+            valid=np.asarray(valid), source=np.asarray(source),
+            wan_bytes=float(wan_bytes), coord_bytes=float(coord_bytes),
+            cloud_frames=f, latency=lat,
+            fog_features=np.asarray(feats), prop_boxes=np.asarray(prop_boxes),
+            prop_valid=np.asarray(prop_valid),
+            fog_scores=np.asarray(fog_scores))
+
+    def cloud_cost(self, result: ChunkResult) -> float:
+        # RQ2: one cloud detector pass per frame, nothing else
+        return self.cost_model.cost(result.cloud_frames, rounds=1.0)
+
+
+def detections_for_metrics(res: ChunkResult, frame: int
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Extract (boxes, labels) arrays for the F1 accumulator."""
+    keep = res.valid[frame]
+    return res.boxes[frame][keep], res.labels[frame][keep]

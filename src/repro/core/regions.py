@@ -1,0 +1,97 @@
+"""Region selection, the §IV.B three-stage filter, and HQ crop extraction.
+
+Everything is fixed-shape / lax-friendly: each frame carries a constant
+region budget N with validity masks, so the whole protocol jits and shards.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+class RegionSplit(NamedTuple):
+    # accepted: cloud-confident detections, used directly as labels (RQ1)
+    acc_boxes: jax.Array        # (F, N, 4)
+    acc_labels: jax.Array       # (F, N) int32
+    acc_valid: jax.Array        # (F, N) bool
+    # uncertain: only coordinates travel back to the fog (RQ3)
+    prop_boxes: jax.Array       # (F, N, 4)
+    prop_valid: jax.Array       # (F, N) bool
+
+
+def split_regions(
+    det: Dict[str, jax.Array],  # detector output on LOW-quality frames
+    *,
+    theta_cls: float,           # classification confidence to accept directly
+    theta_loc: float,           # §IV.B location-confidence threshold
+    theta_iou: float,           # §IV.B overlap threshold
+    theta_back: float,          # §IV.B background-area threshold (fraction)
+    impl: str = "ref",
+) -> RegionSplit:
+    boxes, loc, probs = det["boxes"], det["loc_scores"], det["cls_probs"]
+    cls_conf = jnp.max(probs, axis=-1)
+    labels = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+
+    nms_iou = 0.45
+    acc_raw = (loc >= theta_loc) & (cls_conf >= theta_cls)
+    acc_valid = jax.vmap(
+        lambda b, s, v: ops.nms_mask(b, s, v, iou_threshold=nms_iou,
+                                     impl=impl))(boxes, loc * cls_conf,
+                                                 acc_raw)
+
+    def per_frame(bx, lc, av):
+        keep = ops.region_filter_mask(
+            bx, lc >= theta_loc, bx, av, lc,
+            theta_loc=theta_loc, theta_iou=theta_iou, theta_back=theta_back,
+            impl=impl)
+        keep = keep & ~av          # accepted regions don't go to the fog
+        return ops.nms_mask(bx, lc, keep, iou_threshold=nms_iou, impl=impl)
+
+    prop_valid = jax.vmap(per_frame)(boxes, loc, acc_valid)
+    return RegionSplit(boxes, labels, acc_valid, boxes, prop_valid)
+
+
+def coordinate_bytes(split: RegionSplit) -> jax.Array:
+    """Bytes for the returned coordinates (paper: 'only several bytes').
+
+    4 x float16 coords + 1 byte header per proposal region.
+    """
+    return jnp.sum(split.prop_valid.astype(jnp.float32)) * 9.0
+
+
+# ---------------------------------------------------------------------------
+# HQ crop extraction (fog side)
+# ---------------------------------------------------------------------------
+def crop_and_resize(
+    frame: jax.Array,           # (H, W, 3)
+    boxes: jax.Array,           # (N, 4) xyxy in [0, 1]
+    out_hw: Tuple[int, int],
+) -> jax.Array:
+    """Bilinear crop of each box to out_hw; returns (N, h, w, 3)."""
+    h_img, w_img = frame.shape[0], frame.shape[1]
+    oh, ow = out_hw
+
+    def one(box):
+        x1, y1, x2, y2 = box[0], box[1], box[2], box[3]
+        ys = y1 * (h_img - 1) + (y2 - y1) * (h_img - 1) * \
+            jnp.linspace(0.0, 1.0, oh)
+        xs = x1 * (w_img - 1) + (x2 - x1) * (w_img - 1) * \
+            jnp.linspace(0.0, 1.0, ow)
+        yy, xx = jnp.meshgrid(ys, xs, indexing="ij")
+        coords = jnp.stack([yy.ravel(), xx.ravel()])
+        out = jnp.stack([
+            jax.scipy.ndimage.map_coordinates(frame[..., c], coords, order=1)
+            for c in range(frame.shape[-1])], axis=-1)
+        return out.reshape(oh, ow, frame.shape[-1])
+
+    return jax.vmap(one)(boxes)
+
+
+def crop_batch(frames: jax.Array, boxes: jax.Array,
+               out_hw: Tuple[int, int]) -> jax.Array:
+    """frames (F, H, W, 3), boxes (F, N, 4) -> (F, N, h, w, 3)."""
+    return jax.vmap(lambda f, b: crop_and_resize(f, b, out_hw))(frames, boxes)

@@ -1,0 +1,117 @@
+"""Pallas TPU decode attention: one query token vs a long KV cache.
+
+Decode is HBM-bandwidth-bound: the whole KV cache is read once per step.
+Tiling: grid = (batch, kv_heads, kv_blocks); all q heads of one GQA group
+ride along as a (group, d) tile, so each KV tile is streamed from HBM into
+VMEM exactly ONCE per group (the TPU analog of the shared-memory KV reuse
+in GPU decode kernels).  Online softmax state (m, l, acc) persists in VMEM
+scratch across kv blocks.  ``cache_len`` rides in SMEM (scalar per batch
+row) and masks the tail block.
+
+Validated against ``repro.kernels.ref.decode_attention`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BK = 512
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, window: Optional[int], softcap: Optional[float],
+            bk: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32) * scale        # (g, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (bk, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)                # (bk, d)
+    clen = len_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (g, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = pos < clen
+    if window is not None:
+        mask &= pos >= (clen - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0, :, :] = (acc_scr[...]
+                             / jnp.maximum(l_scr[...], 1e-30)
+                             ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "bk",
+                                             "interpret"))
+def decode_attention(
+    q: jax.Array,               # (b, n_q, d)
+    k_cache: jax.Array,         # (b, S, n_kv, d)
+    v_cache: jax.Array,         # (b, S, n_kv, d)
+    cache_len,                  # scalar or (b,) int32
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    b, n_q, d = q.shape
+    _, S, n_kv, _ = k_cache.shape
+    g = n_q // n_kv
+    bk = min(bk, S)
+    pk = (-S) % bk
+    if pk:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    S_p = S + pk
+
+    clen = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    qg = q.reshape(b, n_kv, g, d)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=d ** -0.5, window=window,
+                          softcap=softcap, bk=bk),
+        grid=(b, n_kv, S_p // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, ik: (ib,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda ib, ih, ik: (ib, ik, ih, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda ib, ih, ik: (ib, ik, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(clen, qg, k_cache, v_cache)
+    return out.reshape(b, n_q, d)

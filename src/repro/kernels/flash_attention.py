@@ -1,0 +1,139 @@
+"""Pallas TPU flash attention (prefill / training), GQA + causal + sliding
+window + logit softcap.
+
+Tiling: grid = (batch, q_heads, q_blocks, kv_blocks); the kv dimension is the
+innermost (sequential) axis, so the (m, l, acc) online-softmax state lives in
+VMEM scratch across kv steps.  Block shapes keep the MXU busy: BQ x D and
+BK x D tiles with D = head_dim (multiples of 128 for the MXU;
+head_dim 64/96/112/256 still lower via lane packing).  GQA: the kv BlockSpec
+index map folds q-head -> kv-head (ih // group), so each KV tile is fetched
+once per group member from HBM but never duplicated in VMEM.
+
+Validated against ``repro.kernels.ref.flash_attention`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: Optional[float], q_offset: int, bq: int, bk: int,
+            kv_len: int):
+    ib, ih, iq, ik = (pl.program_id(0), pl.program_id(1), pl.program_id(2),
+                      pl.program_id(3))
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale        # (bq, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (bk, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)                # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + q_offset
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                       # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                    # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                           # (bq, 1)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "q_offset", "bq", "bk",
+                     "interpret"))
+def flash_attention(
+    q: jax.Array,               # (b, s_q, n_q, d)
+    k: jax.Array,               # (b, s_kv, n_kv, d)
+    v: jax.Array,               # (b, s_kv, n_kv, d)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s_q, n_q, d = q.shape
+    _, s_kv, n_kv, _ = k.shape
+    group = n_q // n_kv
+    bq = min(bq, s_q)
+    bk = min(bk, s_kv)
+    # pad sequence dims to block multiples
+    pq = (-s_q) % bq
+    pk = (-s_kv) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    sq_p, sk_p = s_q + pq, s_kv + pk
+
+    grid = (b, n_q, sq_p // bq, sk_p // bk)
+    kernel = functools.partial(
+        _kernel, scale=d ** -0.5, causal=causal, window=window,
+        softcap=softcap, q_offset=q_offset, bq=bq, bk=bk, kv_len=s_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda ib, ih, iq, ik, g=group: (ib, ik, ih // g, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda ib, ih, iq, ik, g=group: (ib, ik, ih // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, d),
+                               lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq_p, n_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s_q]

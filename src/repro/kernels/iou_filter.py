@@ -1,0 +1,134 @@
+"""Pallas TPU kernel for the §IV.B region filter hot spot.
+
+The filter's inner loop is the pairwise IoU of N proposals vs M accepted
+boxes.  Tiling: grid = (N/BN, M/BM); each program computes a BN x BM IoU
+tile from two box tiles living in VMEM (boxes are (x1, y1, x2, y2) rows, so
+a tile is BN x 4 — lane-packed).  The fused variant also folds the
+three-stage threshold logic (theta_loc / max-IoU / theta_back) into the last
+tile pass via a running max-IoU scratch, so the mask never round-trips HBM.
+
+Validated against ``repro.kernels.ref`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _iou_tile(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a (BN, 4), b (BM, 4) -> IoU (BN, BM) in fp32."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    ax1, ay1, ax2, ay2 = a[:, 0:1], a[:, 1:2], a[:, 2:3], a[:, 3:4]
+    bx1, by1, bx2, by2 = b[:, 0], b[:, 1], b[:, 2], b[:, 3]
+    iw = jnp.maximum(jnp.minimum(ax2, bx2[None, :]) -
+                     jnp.maximum(ax1, bx1[None, :]), 0.0)
+    ih = jnp.maximum(jnp.minimum(ay2, by2[None, :]) -
+                     jnp.maximum(ay1, by1[None, :]), 0.0)
+    inter = iw * ih
+    area_a = jnp.maximum(ax2 - ax1, 0.0) * jnp.maximum(ay2 - ay1, 0.0)
+    area_b = (jnp.maximum(bx2 - bx1, 0.0)
+              * jnp.maximum(by2 - by1, 0.0))[None, :]
+    union = area_a + area_b - inter
+    return inter / jnp.maximum(union, 1e-9)
+
+
+def _iou_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = _iou_tile(a_ref[...], b_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
+def iou_matrix(boxes_a: jax.Array, boxes_b: jax.Array, *, bn: int = 128,
+               bm: int = 128, interpret: bool = False) -> jax.Array:
+    n, m = boxes_a.shape[0], boxes_b.shape[0]
+    bn = min(bn, n)
+    bm = min(bm, m)
+    pn, pm = (-n) % bn, (-m) % bm
+    if pn:
+        boxes_a = jnp.pad(boxes_a, ((0, pn), (0, 0)))
+    if pm:
+        boxes_b = jnp.pad(boxes_b, ((0, pm), (0, 0)))
+    out = pl.pallas_call(
+        _iou_kernel,
+        grid=((n + pn) // bn, (m + pm) // bm),
+        in_specs=[pl.BlockSpec((bn, 4), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bm, 4), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n + pn, m + pm), jnp.float32),
+        interpret=interpret,
+    )(boxes_a, boxes_b)
+    return out[:n, :m]
+
+
+# ---------------------------------------------------------------------------
+# Fused three-stage filter
+# ---------------------------------------------------------------------------
+def _filter_kernel(prop_ref, pv_ref, acc_ref, av_ref, loc_ref, keep_ref,
+                   maxiou_scr, *, theta_loc, theta_iou, theta_back,
+                   frame_area, bm: int):
+    j = pl.program_id(1)
+    nm = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        maxiou_scr[...] = jnp.zeros_like(maxiou_scr)
+
+    iou = _iou_tile(prop_ref[...], acc_ref[...])          # (BN, BM)
+    iou = jnp.where(av_ref[...][None, :] > 0, iou, 0.0)
+    maxiou_scr[...] = jnp.maximum(maxiou_scr[...],
+                                  jnp.max(iou, axis=-1, keepdims=True))
+
+    @pl.when(j == nm - 1)
+    def _finalize():
+        p = prop_ref[...].astype(jnp.float32)
+        w = jnp.maximum(p[:, 2] - p[:, 0], 0.0)
+        h = jnp.maximum(p[:, 3] - p[:, 1], 0.0)
+        keep = (pv_ref[...] > 0) & (loc_ref[...] >= theta_loc)
+        keep &= maxiou_scr[...][:, 0] < theta_iou
+        keep &= (w * h / frame_area) <= theta_back
+        keep_ref[...] = keep.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "theta_loc", "theta_iou", "theta_back", "frame_area", "bn", "bm",
+    "interpret"))
+def region_filter_mask(proposals, prop_valid, accepted, acc_valid, loc_scores,
+                       *, theta_loc: float, theta_iou: float,
+                       theta_back: float, frame_area: float = 1.0,
+                       bn: int = 128, bm: int = 128,
+                       interpret: bool = False) -> jax.Array:
+    n, m = proposals.shape[0], accepted.shape[0]
+    bn = min(bn, n)
+    bm = min(bm, m)
+    pn, pm = (-n) % bn, (-m) % bm
+    if pn:
+        proposals = jnp.pad(proposals, ((0, pn), (0, 0)))
+        prop_valid = jnp.pad(prop_valid, (0, pn))
+        loc_scores = jnp.pad(loc_scores, (0, pn))
+    if pm:
+        accepted = jnp.pad(accepted, ((0, pm), (0, 0)))
+        acc_valid = jnp.pad(acc_valid, (0, pm))
+
+    keep = pl.pallas_call(
+        functools.partial(_filter_kernel, theta_loc=theta_loc,
+                          theta_iou=theta_iou, theta_back=theta_back,
+                          frame_area=frame_area, bm=bm),
+        grid=((n + pn) // bn, (m + pm) // bm),
+        in_specs=[
+            pl.BlockSpec((bn, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bm, 4), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pn,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bn, 1), jnp.float32)],
+        interpret=interpret,
+    )(proposals, prop_valid.astype(jnp.int32), accepted,
+      acc_valid.astype(jnp.int32), loc_scores)
+    return keep[:n].astype(bool)

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel for the Mamba2 SSD (state-space duality) chunked scan.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060): the sequence is cut
+into chunks of Q tokens.  Within a chunk everything is dense matmuls (MXU
+food): the quadratic intra-chunk term (C B^T ∘ L) X and the chunk-state
+projection.  Across chunks a tiny recurrence carries the (p, n) state in
+VMEM scratch — grid = (batch, heads, chunks) with chunks as the sequential
+axis.  B/C are shared across heads (n_groups = 1), so their tiles are
+fetched per chunk, not per head.
+
+Validated against ``repro.kernels.ref.ssd_scan`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, init_ref,
+            y_ref, fin_ref, state_scr, *, chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = init_ref[0, 0].astype(jnp.float32)   # (p, n)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)                 # (Q, p)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)                  # (Q,)
+    A = A_ref[0]                                              # scalar
+    B = B_ref[0].astype(jnp.float32)                          # (Q, n)
+    C = C_ref[0].astype(jnp.float32)                          # (Q, n)
+
+    dA = dt * A                                               # (Q,)
+    cums = jnp.cumsum(dA)                                     # (Q,)
+    # intra-chunk decay matrix L[i, j] = exp(sum_{j<k<=i} dA_k), j <= i
+    seg = cums[:, None] - cums[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)                # (Q, Q)
+
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    dtx = x * dt[:, None]                                     # (Q, p)
+    y_diag = jax.lax.dot_general(scores * L, dtx,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # inter-chunk: previous state contribution + state update
+    state = state_scr[...]                                    # (p, n)
+    decay_in = jnp.exp(cums)                                  # (Q,)
+    y_off = jax.lax.dot_general(C * decay_in[:, None], state,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (Q, p)
+
+    decay_state = jnp.exp(cums[-1] - cums)                    # (Q,)
+    chunk_state = jax.lax.dot_general(
+        dtx, B * decay_state[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                   # (p, n)
+    state_scr[...] = state * jnp.exp(cums[-1]) + chunk_state
+
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _finalize():
+        fin_ref[0, 0] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,               # (b, s, h, p)
+    dt: jax.Array,              # (b, s, h)
+    A: jax.Array,               # (h,)
+    B: jax.Array,               # (b, s, n)
+    C: jax.Array,               # (b, s, n)
+    *,
+    chunk: int = 64,
+    initial_state=None,         # (b, h, p, n)
+    interpret: bool = False,
+):
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s_p = s + pad
+    nc = s_p // chunk
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+
+    y, fin = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, chunk, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s_p, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), B, C, init)
+    return y[:, :s], fin

@@ -1,0 +1,77 @@
+"""Model profiler CLI (the global control plane's profiler, Fig. 3):
+analytic per-arch tables — params, per-shape model FLOPs, KV-cache and
+optimizer footprints, roofline-floor step times on the target chip.
+
+  PYTHONPATH=src python -m repro.launch.profile
+  PYTHONPATH=src python -m repro.launch.profile --arch gemma2-9b
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.launch.specs import arch_for_shape
+from repro.roofline.analysis import model_flops
+from repro.roofline.hw import TPU_V5E
+
+
+def kv_cache_bytes(cfg, batch: int, seq: int, bytes_per: int = 2) -> int:
+    total = 0
+    kinds = (list(cfg.prefix_layers)
+             + list(cfg.block_pattern) * cfg.num_blocks
+             + list(cfg.suffix_layers))
+    for k in kinds:
+        if k in ("attn", "local", "moe", "cross", "shared_attn"):
+            if cfg.mla:
+                total += batch * seq * (cfg.kv_lora_rank
+                                        + cfg.rope_head_dim) * bytes_per
+            else:
+                total += (2 * batch * seq * cfg.num_kv_heads * cfg.head_dim
+                          * bytes_per)
+        elif k in ("ssm", "ssm_ffn"):
+            total += (batch * cfg.n_ssm_heads * cfg.ssm_head_dim
+                      * cfg.ssm_state * 4
+                      + batch * (cfg.conv_kernel - 1)
+                      * (cfg.d_inner + 2 * cfg.ssm_state) * bytes_per)
+    return total
+
+
+def profile_arch(name: str, chips: int = 256) -> None:
+    cfg = get_config(name)
+    n = cfg.param_count()
+    na = cfg.active_param_count()
+    chip = TPU_V5E
+    print(f"\n== {name} [{cfg.family}] ==")
+    print(f"  params {n / 1e9:.1f}B (active {na / 1e9:.1f}B), "
+          f"{cfg.num_layers}L d{cfg.d_model} "
+          f"{'MLA ' if cfg.mla else ''}"
+          f"{'MoE ' + str(cfg.num_experts) + 'e ' if cfg.num_experts else ''}")
+    print(f"  weights bf16 {n * 2 / 1e9:.1f} GB "
+          f"({n * 2 / chips / 1e9:.2f} GB/chip @{chips}); "
+          f"AdamW fp32 state {n * 8 / 1e9:.0f} GB "
+          f"({n * 8 / chips / 1e9:.2f} GB/chip)")
+    for sname, shape in sorted(INPUT_SHAPES.items()):
+        acfg = arch_for_shape(cfg, shape)
+        mf = model_flops(acfg, shape)
+        floor = mf / (chips * chip.peak_flops_bf16)
+        kv = kv_cache_bytes(acfg, shape.global_batch, shape.seq_len)
+        line = (f"  {sname:12s} model_flops {mf:.2e}  "
+                f"compute-floor {floor * 1e3:8.2f} ms/step")
+        if shape.mode == "decode":
+            line += (f"  cache {kv / 1e9:7.1f} GB "
+                     f"({kv / chips / 1e9:.2f}/chip, "
+                     f"read-floor {kv / chips / chip.hbm_bandwidth * 1e3:.2f} ms)")
+        print(line)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--chips", type=int, default=256)
+    args = ap.parse_args()
+    for name in ([args.arch] if args.arch else list_archs()):
+        profile_arch(name, args.chips)
+
+
+if __name__ == "__main__":
+    main()

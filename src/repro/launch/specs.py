@@ -1,0 +1,251 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input, plus the
+jit-able step functions and their sharding specs for each (arch x shape).
+
+Everything here is allocation-free: abstract params, abstract caches,
+abstract batches.  The dry-run lowers + compiles these; the real launcher
+(train.py / serve.py) uses the same functions with concrete arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import sharding as shd
+from repro.models import stubs
+from repro.models import transformer as tfm
+from repro.training.optimizer import AdamW, AdamWState
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def arch_for_shape(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Adapt an arch to a shape: long_500k needs a sub-quadratic variant.
+
+    Dense/MoE/VLM/audio archs switch full-attention layers to sliding-window
+    (beyond-paper variant, recorded in DESIGN.md §5); SSM/hybrid archs run
+    unchanged.  gemma2's local layers already slide."""
+    if shape.name != "long_500k" or cfg.sub_quadratic:
+        return cfg
+    pattern = tuple("local" if k in ("attn",) else k
+                    for k in cfg.block_pattern)
+    prefix = tuple("local" if k == "attn" else k for k in cfg.prefix_layers)
+    suffix = tuple("local" if k == "attn" else k for k in cfg.suffix_layers)
+    return dataclasses.replace(
+        cfg, name=cfg.name + "+sliding", block_pattern=pattern,
+        prefix_layers=prefix, suffix_layers=suffix,
+        sliding_window=8192, num_blocks=cfg.num_blocks)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                *, dtype=COMPUTE_DTYPE) -> Dict[str, Any]:
+    """Abstract model inputs for one (arch, shape)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct
+    if shape.mode == "train":
+        specs = {"tokens": tok((b, s), jnp.int32),
+                 "labels": tok((b, s), jnp.int32)}
+        if cfg.num_ctx_tokens:
+            specs["ctx_embed"] = stubs.frontend_spec(cfg, b, dtype)
+        return specs
+    if shape.mode == "prefill":
+        specs = {"tokens": tok((b, s), jnp.int32)}
+        if cfg.num_ctx_tokens:
+            specs["ctx_embed"] = stubs.frontend_spec(cfg, b, dtype)
+        return specs
+    # decode: ONE new token + a cache of seq_len
+    specs = {"tokens": tok((b, 1), jnp.int32),
+             "cache": tfm.abstract_cache(cfg, b, s, dtype),
+             "cache_index": tok((), jnp.int32)}
+    if cfg.num_ctx_tokens:
+        specs["ctx_embed"] = stubs.frontend_spec(cfg, b, dtype)
+    return specs
+
+
+def _minus_model(axes):
+    """Drop "model" from an axis spec (experts already occupy that axis)."""
+    if axes is None or axes == "model":
+        return None
+    if isinstance(axes, tuple):
+        kept = tuple(a for a in axes if a != "model")
+        return kept if kept else None
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+def make_step(cfg: ModelConfig, shape: ShapeConfig, rules: Dict[str, Any],
+              mesh: Mesh, *, impl: str = "ref", remat: bool = True,
+              unroll_blocks: bool = False, lr: float = 1e-4,
+              microbatch: int = 1):
+    """Returns (fn, abstract_args, in_shardings, out_shardings)."""
+    act_spec = shd.activation_spec(rules)
+    batch_axes = rules.get("act_batch")
+    batch_tuple = (batch_axes if isinstance(batch_axes, tuple)
+                   else ((batch_axes,) if batch_axes else ()))
+    seq_ax = rules.get("act_seq")
+    group_axes = batch_tuple + ((seq_ax,) if seq_ax else ())
+    group_spec = tuple(group_axes) if group_axes else None
+    kind_specs = {
+        "residual": act_spec,
+        # grouped MoE: group dim g = (data groups x seq groups); expert
+        # tensors are 2D-sharded (experts@model x capacity@data) so no data
+        # shard recomputes the global capacity
+        # the trailing d_model dim inherits act_embed (decode shards the
+        # residual over "data" so expert matmuls contract locally and emit
+        # tiny all-reduces instead of gathering expert weights)
+        "moe_tokens": PartitionSpec(group_spec, None, rules.get("act_embed")),
+        "moe_buffer": PartitionSpec(group_spec, None,
+                                    rules.get("act_embed")),
+        "expert": PartitionSpec("model", _minus_model(batch_axes),
+                                rules.get("act_embed")),
+        "expert_ff": PartitionSpec("model", _minus_model(batch_axes), None),
+    }
+
+    def constrain(x, kind="residual"):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, kind_specs[kind]))
+
+    p_specs = tfm.param_partition_specs(cfg, rules)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+    params_abs = tfm.abstract_params(cfg, COMPUTE_DTYPE)
+    tok_shard = NamedSharding(mesh, shd.token_spec(rules))
+    ctx_shard = NamedSharding(mesh, shd.ctx_spec(rules))
+    repl = NamedSharding(mesh, PartitionSpec())
+
+    specs = input_specs(cfg, shape)
+    ax_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    gd = 1
+    for a in batch_tuple:
+        gd *= ax_sizes.get(a, 1)
+    gm = ax_sizes.get(seq_ax, 1) if seq_ax else 1
+    moe_groups = (gd, gm)
+
+    if shape.mode == "train":
+        opt = AdamW(lr=lr)
+
+        # two-level FSDP: weights stored 2D (d@fsdp, f@model) but gathered
+        # over the fsdp axis only at use (§Perf P1-I4)
+        block_constraint = None
+        if rules.get("fsdp_gather_at_use"):
+            use_rules = dict(rules)
+            use_rules["embed"] = None
+            unit_specs = tfm.block_unit_specs(cfg, use_rules)
+            unit_shard = jax.tree.map(lambda sp: NamedSharding(mesh, sp),
+                                      unit_specs)
+
+            def block_constraint(bp):
+                return jax.tree.map(jax.lax.with_sharding_constraint, bp,
+                                    unit_shard)
+
+        def loss_of(params, batch):
+            return tfm.loss_fn(cfg, params, batch, impl=impl, remat=remat,
+                               act_constraint=constrain,
+                               unroll_blocks=unroll_blocks,
+                               moe_groups=moe_groups,
+                               block_param_constraint=block_constraint,
+                               dtype=COMPUTE_DTYPE)
+
+        if microbatch > 1 and shape.global_batch % microbatch == 0:
+            # gradient accumulation: scan over K microbatches, accumulating
+            # grads; activation live-set shrinks ~K-fold (the standard fix
+            # for train shapes whose activations exceed HBM)
+            mb = shape.global_batch // microbatch
+
+            def train_step(params, opt_state, batch):
+                def reshape(x):
+                    return x.reshape((microbatch, mb) + x.shape[1:])
+
+                mbatches = jax.tree.map(reshape, batch)
+
+                def one(carry, mbatch):
+                    acc, tot = carry
+                    (loss_val, parts), grads = jax.value_and_grad(
+                        loss_of, has_aux=True)(params, mbatch)
+                    acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32) / microbatch,
+                        acc, grads)
+                    return (acc, tot + loss_val / microbatch), parts["ce"]
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, total), _ = jax.lax.scan(
+                    one, (zeros, jnp.zeros((), jnp.float32)), mbatches)
+                new_params, new_opt = opt.update(grads, opt_state, params)
+                return new_params, new_opt, {"loss": total,
+                                             "ce": total,
+                                             "aux": jnp.zeros(())}
+        else:
+            def train_step(params, opt_state, batch):
+                (total, parts), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, batch)
+                new_params, new_opt = opt.update(grads, opt_state, params)
+                return new_params, new_opt, {"loss": total, **parts}
+
+        opt_abs = AdamWState(
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32),
+                         params_abs),
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32),
+                         params_abs))
+        opt_shard = AdamWState(repl, p_shard, p_shard)
+        batch_shard = {"tokens": tok_shard, "labels": tok_shard}
+        if "ctx_embed" in specs:
+            batch_shard["ctx_embed"] = ctx_shard
+        in_sh = (p_shard, opt_shard, batch_shard)
+        out_sh = (p_shard, opt_shard, repl)
+        args = (params_abs, opt_abs, specs)
+        return train_step, args, in_sh, out_sh
+
+    cache_specs = tfm.cache_partition_specs(cfg, shape.global_batch,
+                                            shape.seq_len, rules)
+    cache_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), cache_specs)
+
+    if shape.mode == "prefill":
+        def prefill_step(params, tokens, ctx_embed=None):
+            cache = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, x.dtype),
+                tfm.abstract_cache(cfg, shape.global_batch, shape.seq_len,
+                                   COMPUTE_DTYPE),
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            logits, new_cache = tfm.prefill(
+                cfg, params, tokens, cache, ctx_embed=ctx_embed, impl=impl,
+                act_constraint=constrain, unroll_blocks=unroll_blocks,
+                moe_groups=moe_groups, dtype=COMPUTE_DTYPE)
+            return logits, new_cache
+
+        in_sh = [p_shard, tok_shard]
+        args = [params_abs, specs["tokens"]]
+        if "ctx_embed" in specs:
+            in_sh.append(ctx_shard)
+            args.append(specs["ctx_embed"])
+        out_sh = (NamedSharding(mesh, PartitionSpec(rules.get("act_batch"),
+                                                    "model")),
+                  cache_shard)
+        return prefill_step, tuple(args), tuple(in_sh), out_sh
+
+    # decode
+    def decode_step(params, tokens, cache, cache_index, ctx_embed=None):
+        return tfm.decode_step(cfg, params, tokens, cache, cache_index,
+                               ctx_embed=ctx_embed, impl=impl,
+                               act_constraint=constrain,
+                               unroll_blocks=unroll_blocks,
+                               moe_groups=moe_groups,
+                               dtype=COMPUTE_DTYPE)
+
+    in_sh = [p_shard, tok_shard, cache_shard, repl]
+    args = [params_abs, specs["tokens"], specs["cache"],
+            specs["cache_index"]]
+    if "ctx_embed" in specs:
+        in_sh.append(ctx_shard)
+        args.append(specs["ctx_embed"])
+    logits_out = NamedSharding(
+        mesh, PartitionSpec(rules.get("act_batch"), None, "model"))
+    out_sh = (logits_out, cache_shard)
+    return decode_step, tuple(args), tuple(in_sh), out_sh

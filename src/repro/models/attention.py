@@ -1,0 +1,247 @@
+"""Attention mixers: GQA self-attention (full / sliding-window), MLA
+(DeepSeek latent attention), and cross-attention over frontend embeddings.
+
+All functions are pure; decode passes a KV cache pytree + ``cache_index``
+(scalar int32 count of valid cache slots, i.e. the write position).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import apply_rope
+from repro.models.schema import Leaf
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+def attn_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    q_dim = cfg.num_heads * cfg.head_dim
+    kv_dim = cfg.num_kv_heads * cfg.head_dim
+    s = {
+        "wq": Leaf((d, q_dim), ("embed", "q_dim"), "fan_in"),
+        "wk": Leaf((d, kv_dim), ("embed", "kv_dim"), "fan_in"),
+        "wv": Leaf((d, kv_dim), ("embed", "kv_dim"), "fan_in"),
+        "wo": Leaf((q_dim, d), ("q_dim", "embed"), "fan_in"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = Leaf((q_dim,), ("q_dim",), "zeros")
+        s["bk"] = Leaf((kv_dim,), ("kv_dim",), "zeros")
+        s["bv"] = Leaf((kv_dim,), ("kv_dim",), "zeros")
+    return s
+
+
+def mla_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    nh, hd, rd = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    r = cfg.kv_lora_rank
+    return {
+        # queries (no q-lora in V2-Lite): per-head nope + rope parts
+        "wq": Leaf((d, nh * (hd + rd)), ("embed", "q_dim"), "fan_in"),
+        # kv down-projection to latent + decoupled rope key
+        "w_dkv": Leaf((d, r), ("embed", "lora"), "fan_in"),
+        "w_krope": Leaf((d, rd), ("embed", "rope"), "fan_in"),
+        # up-projections from latent
+        "w_uk": Leaf((r, nh * hd), ("lora", "q_dim"), "fan_in"),
+        "w_uv": Leaf((r, nh * hd), ("lora", "q_dim"), "fan_in"),
+        "wo": Leaf((nh * hd, d), ("q_dim", "embed"), "fan_in"),
+    }
+
+
+def cross_attn_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    q_dim = cfg.num_heads * cfg.head_dim
+    kv_dim = cfg.num_kv_heads * cfg.head_dim
+    return {
+        "wq": Leaf((d, q_dim), ("embed", "q_dim"), "fan_in"),
+        "wk": Leaf((d, kv_dim), ("embed", "kv_dim"), "fan_in"),
+        "wv": Leaf((d, kv_dim), ("embed", "kv_dim"), "fan_in"),
+        "wo": Leaf((q_dim, d), ("q_dim", "embed"), "fan_in"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cache schemas (as ShapeDtypeStructs; see transformer.init_cache)
+# ---------------------------------------------------------------------------
+def attn_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    kv = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": kv, "v": kv}
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    return {
+        "c_kv": (batch, max_seq, cfg.kv_lora_rank),
+        "k_rope": (batch, max_seq, cfg.rope_head_dim),
+    }
+
+
+def _cache_update(cache: jax.Array, new: jax.Array,
+                  index: jax.Array) -> jax.Array:
+    """Write ``new`` (b, s, ...) into ``cache`` (b, S, ...) at seq position
+    ``index`` (scalar, or (b,) for per-slot continuous batching)."""
+    new = new.astype(cache.dtype)
+    idx = jnp.asarray(index)
+    if idx.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, idx, axis=1)
+    return jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+    )(cache, new, idx)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention
+# ---------------------------------------------------------------------------
+def _project_qkv(cfg: ModelConfig, params, x):
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    b, s, _ = x.shape
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def self_attention(
+    cfg: ModelConfig,
+    params,
+    x: jax.Array,                       # (b, s, d)
+    positions: jax.Array,               # (b, s)
+    *,
+    window: Optional[int] = None,
+    cache=None,
+    cache_index: Optional[jax.Array] = None,
+    impl: str = "ref",
+) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = ops.flash_attention(
+            q, k, v, causal=True, window=window,
+            softcap=cfg.attn_logit_softcap, impl=impl)
+        new_cache = None
+    else:
+        # write new kv into the cache at cache_index, then attend over cache;
+        # cache_index may be scalar (uniform) or (b,) (continuous batching)
+        k_cache = _cache_update(cache["k"], k, cache_index)
+        v_cache = _cache_update(cache["v"], v, cache_index)
+        new_cache = {"k": k_cache, "v": v_cache}
+        if s == 1:
+            out = ops.decode_attention(
+                q[:, 0], k_cache, v_cache, cache_index + 1,
+                window=window, softcap=cfg.attn_logit_softcap, impl=impl)
+            out = out[:, None]
+        else:  # chunked prefill into cache
+            out = ops.flash_attention(
+                q, k_cache, v_cache, causal=True, window=window,
+                softcap=cfg.attn_logit_softcap, q_offset_arr=cache_index,
+                impl=impl)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return out @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+def mla_attention(
+    cfg: ModelConfig,
+    params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache=None,
+    cache_index: Optional[jax.Array] = None,
+    impl: str = "ref",
+) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, _ = x.shape
+    nh, hd, rd = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+
+    q = (x @ params["wq"]).reshape(b, s, nh, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = x @ params["w_dkv"]                        # (b, s, r)
+    k_rope = (x @ params["w_krope"]).reshape(b, s, 1, rd)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is not None:
+        c_kv = _cache_update(cache["c_kv"], c_kv, cache_index)
+        k_rope = _cache_update(cache["k_rope"], k_rope, cache_index)
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    else:
+        new_cache = None
+
+    if cache is not None and s == 1:
+        # Weight-absorbed decode (the MLA efficiency mechanism): attention is
+        # computed directly against the *latent* cache; per-head K/V are never
+        # materialized.  Cache bytes/step = S*(r + rd) instead of S*nh*2*hd.
+        S = c_kv.shape[1]
+        r = cfg.kv_lora_rank
+        scale = (hd + rd) ** -0.5
+        w_uk = params["w_uk"].reshape(r, nh, hd).astype(jnp.float32)
+        w_uv = params["w_uv"].reshape(r, nh, hd).astype(jnp.float32)
+        q_abs = jnp.einsum("bnd,rnd->bnr", q_nope[:, 0].astype(jnp.float32),
+                           w_uk)
+        logits = (jnp.einsum("bnr,bSr->bnS", q_abs,
+                             c_kv.astype(jnp.float32))
+                  + jnp.einsum("bnd,bSd->bnS",
+                               q_rope[:, 0].astype(jnp.float32),
+                               k_rope.astype(jnp.float32))) * scale
+        clen = jnp.asarray(cache_index) + 1
+        clen = clen[:, None, None] if clen.ndim == 1 else clen
+        valid = jnp.arange(S)[None, None, :] < clen
+        logits = jnp.where(valid, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctxv = jnp.einsum("bnS,bSr->bnr", probs, c_kv.astype(jnp.float32))
+        out = jnp.einsum("bnr,rnd->bnd", ctxv, w_uv).astype(x.dtype)
+        out = out.reshape(b, 1, nh * hd)
+        return out @ params["wo"], new_cache
+
+    S = c_kv.shape[1]
+    k_nope = (c_kv @ params["w_uk"]).reshape(b, S, nh, hd)
+    v = (c_kv @ params["w_uv"]).reshape(b, S, nh, hd)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, S, nh, rd))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    if cache is None:
+        out = ops.flash_attention(q_full, k, v, causal=True, impl=impl)
+    else:
+        out = ops.flash_attention(q_full, k, v, causal=True,
+                                  q_offset_arr=cache_index, impl=impl)
+    out = out.reshape(b, s, nh * hd)
+    return out @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention over frontend (image-patch / audio-frame) embeddings
+# ---------------------------------------------------------------------------
+def cross_attention(
+    cfg: ModelConfig,
+    params,
+    x: jax.Array,                       # (b, s, d)
+    ctx: jax.Array,                     # (b, n_ctx, d)  -- already projected
+    *,
+    impl: str = "ref",
+) -> jax.Array:
+    b, s, _ = x.shape
+    n_ctx = ctx.shape[1]
+    q = (x @ params["wq"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = (ctx @ params["wk"]).reshape(b, n_ctx, cfg.num_kv_heads, cfg.head_dim)
+    v = (ctx @ params["wv"]).reshape(b, n_ctx, cfg.num_kv_heads, cfg.head_dim)
+    out = ops.flash_attention(q, k, v, causal=False, impl=impl)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return out @ params["wo"]

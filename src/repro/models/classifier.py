@@ -1,0 +1,78 @@
+"""The fog classifier: feature backbone + one-vs-all binary heads (§IV.B).
+
+Following the paper, the pipeline is a feature-extraction backbone (the
+"pre-trained on ImageNet" network) producing x_t, fed into a set of binary
+one-vs-all classifiers with weight matrix W — the object updated online by
+the §V incremental-learning rule (bias absorbed by appending 1 to x_t).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.vpaas_video import ClassifierConfig
+from repro.models import schema as sch
+from repro.models.schema import Leaf
+
+
+def classifier_schema(cfg: ClassifierConfig):
+    s = {}
+    cin = cfg.in_channels
+    for i, w in enumerate(cfg.widths):
+        s[f"conv{i}"] = {
+            "w": Leaf((3, 3, cin, w), (None, None, None, "feat"), "fan_in"),
+            "b": Leaf((w,), ("feat",), "zeros"),
+        }
+        cin = w
+    s["proj"] = Leaf((cin, cfg.feature_dim), (None, "feat"), "fan_in")
+    # one-vs-all heads: (feature_dim + 1, C); +1 row absorbs the bias (§V)
+    s["W"] = Leaf((cfg.feature_dim + 1, cfg.num_classes),
+                  ("feat", "classes"), "fan_in")
+    return s
+
+
+def init_classifier(cfg: ClassifierConfig, key: jax.Array, dtype=jnp.float32):
+    return sch.init(classifier_schema(cfg), key, dtype)
+
+
+def features(cfg: ClassifierConfig, params, crops: jax.Array) -> jax.Array:
+    """crops (b, h, w, 3) -> x_t (b, feature_dim + 1) with appended 1."""
+    x = crops
+    for i in range(len(cfg.widths)):
+        x = jax.lax.conv_general_dilated(
+            x, params[f"conv{i}"]["w"], (2, 2), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + params[f"conv{i}"]["b"])
+    x = jnp.mean(x, axis=(1, 2))                        # global average pool
+    x = jax.nn.relu(x @ params["proj"])
+    ones = jnp.ones((x.shape[0], 1), x.dtype)
+    return jnp.concatenate([x, ones], axis=-1)          # bias-absorbing 1
+
+
+def classify(cfg: ClassifierConfig, params, crops: jax.Array,
+             W: jax.Array = None) -> Dict[str, jax.Array]:
+    """Returns per-class one-vs-all scores + argmax prediction.
+
+    ``W`` overrides ``params["W"]`` — this is how incremental-learning
+    snapshots {W_t} are evaluated without rebuilding the params tree.
+    """
+    x = features(cfg, params, crops)
+    w = params["W"] if W is None else W
+    scores = jax.nn.sigmoid(x @ w)                      # (b, C) binary probs
+    return {"features": x, "scores": scores,
+            "pred": jnp.argmax(scores, axis=-1),
+            "confidence": jnp.max(scores, axis=-1)}
+
+
+def classifier_loss(cfg: ClassifierConfig, params, crops: jax.Array,
+                    labels: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One-vs-all BCE over all binary heads (backbone pre-training)."""
+    x = features(cfg, params, crops)
+    logits = x @ params["W"]
+    onehot = jax.nn.one_hot(labels, cfg.num_classes)
+    l = jnp.mean(jnp.maximum(logits, 0) - logits * onehot
+                 + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return l, {"acc": acc}

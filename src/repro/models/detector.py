@@ -1,0 +1,143 @@
+"""The cloud detector (FasterRCNN-101 stand-in) and its loss.
+
+A conv backbone + per-cell dense head that emits the *two separate signals*
+the High-Low protocol exploits:
+
+  * ``loc_scores``  — objectness / location confidence (Key Obs 2: survives
+    aggressive quality degradation);
+  * ``cls_logits``  — classification logits (destroyed by degradation).
+
+Outputs use a fixed region budget (one candidate per backbone cell) so the
+whole pipeline stays ``jax.lax``-friendly (no dynamic shapes).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.vpaas_video import DetectorConfig
+from repro.models import schema as sch
+from repro.models.schema import Leaf
+
+
+def _conv_schema(k: int, cin: int, cout: int):
+    return Leaf((k, k, cin, cout), (None, None, None, "feat"), "fan_in")
+
+
+def detector_schema(cfg: DetectorConfig):
+    s = {}
+    cin = cfg.in_channels
+    for i, w in enumerate(cfg.widths):
+        s[f"conv{i}"] = {"w": _conv_schema(3, cin, w),
+                         "b": Leaf((w,), ("feat",), "zeros")}
+        cin = w
+    # head: objectness(1) + box(4) + classes(C)
+    out = 1 + 4 + cfg.num_classes
+    s["head"] = {"w": _conv_schema(1, cin, out),
+                 "b": Leaf((out,), ("feat",), "zeros")}
+    return s
+
+
+def init_detector(cfg: DetectorConfig, key: jax.Array, dtype=jnp.float32):
+    return sch.init(detector_schema(cfg), key, dtype)
+
+
+def _conv(p, x, stride: int) -> jax.Array:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def backbone(cfg: DetectorConfig, params, images: jax.Array) -> jax.Array:
+    x = images
+    for i in range(len(cfg.widths)):
+        x = jax.nn.relu(_conv(params[f"conv{i}"], x, 2))
+    return x                                            # (b, G, G, w_last)
+
+
+def detect(
+    cfg: DetectorConfig,
+    params,
+    images: jax.Array,            # (b, H, W, 3) in [0, 1]
+) -> Dict[str, jax.Array]:
+    """Returns boxes (b,N,4) xyxy in [0,1], loc_scores (b,N), cls_logits
+    (b,N,C), cls_probs (b,N,C)."""
+    b = images.shape[0]
+    feat = backbone(cfg, params, images)
+    gh, gw = feat.shape[1], feat.shape[2]
+    head = _conv(params["head"], feat, 1)               # (b, gh, gw, 5+C)
+    head = head.reshape(b, gh * gw, -1)
+
+    obj = jax.nn.sigmoid(head[..., 0])                  # (b, N)
+    toff = jax.nn.sigmoid(head[..., 1:3])               # center offset in cell
+    tsize = jax.nn.sigmoid(head[..., 3:5])              # size as frame frac
+    cls_logits = head[..., 5:]
+
+    gy, gx = jnp.meshgrid(jnp.arange(gh), jnp.arange(gw), indexing="ij")
+    cell = jnp.stack([gx.reshape(-1), gy.reshape(-1)], -1).astype(jnp.float32)
+    cx = (cell[None, :, 0] + toff[..., 0]) / gw
+    cy = (cell[None, :, 1] + toff[..., 1]) / gh
+    w = tsize[..., 0]
+    h = tsize[..., 1]
+    boxes = jnp.stack([cx - w / 2, cy - h / 2, cx + w / 2, cy + h / 2], -1)
+    boxes = jnp.clip(boxes, 0.0, 1.0)
+    return {
+        "boxes": boxes,
+        "loc_scores": obj,
+        "cls_logits": cls_logits,
+        "cls_probs": jax.nn.softmax(cls_logits, axis=-1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Training loss (per-cell assignment, YOLO-style)
+# ---------------------------------------------------------------------------
+def detector_loss(
+    cfg: DetectorConfig,
+    params,
+    images: jax.Array,            # (b, H, W, 3)
+    gt_boxes: jax.Array,          # (b, M, 4) xyxy in [0,1]
+    gt_labels: jax.Array,         # (b, M) int32, -1 = padding
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    gh, gw = cfg.grid_hw
+    out = detect(cfg, params, images)
+    b, n = out["loc_scores"].shape
+
+    valid = gt_labels >= 0                              # (b, M)
+    cx = (gt_boxes[..., 0] + gt_boxes[..., 2]) / 2
+    cy = (gt_boxes[..., 1] + gt_boxes[..., 3]) / 2
+    cell = (jnp.clip((cy * gh).astype(jnp.int32), 0, gh - 1) * gw
+            + jnp.clip((cx * gw).astype(jnp.int32), 0, gw - 1))  # (b, M)
+    cell = jnp.where(valid, cell, n)                    # padding -> OOB drop
+
+    # scatter gt into the per-cell target tensors
+    obj_t = jnp.zeros((b, n + 1))
+    obj_t = obj_t.at[jnp.arange(b)[:, None], cell].set(1.0, mode="drop")
+    obj_t = obj_t[:, :n]
+    box_t = jnp.zeros((b, n + 1, 4))
+    box_t = box_t.at[jnp.arange(b)[:, None], cell].set(gt_boxes, mode="drop")
+    box_t = box_t[:, :n]
+    lab_t = jnp.zeros((b, n + 1), jnp.int32)
+    lab_t = lab_t.at[jnp.arange(b)[:, None], cell].set(
+        jnp.maximum(gt_labels, 0), mode="drop")
+    lab_t = lab_t[:, :n]
+
+    obj = out["loc_scores"]
+    # balanced BCE: positives are ~4% of cells; normalize each class
+    # separately so objectness does not collapse toward zero
+    pos_ce = -obj_t * jnp.log(obj + 1e-8)
+    neg_ce = -(1 - obj_t) * jnp.log(1 - obj + 1e-8)
+    l_obj = (jnp.sum(pos_ce) / jnp.maximum(jnp.sum(obj_t), 1.0)
+             + jnp.sum(neg_ce) / jnp.maximum(jnp.sum(1 - obj_t), 1.0))
+    l_box = jnp.sum(obj_t[..., None] * (out["boxes"] - box_t) ** 2) \
+        / jnp.maximum(jnp.sum(obj_t), 1.0)
+    logp = jax.nn.log_softmax(out["cls_logits"], axis=-1)
+    l_cls = -jnp.sum(obj_t * jnp.take_along_axis(
+        logp, lab_t[..., None], axis=-1)[..., 0]) \
+        / jnp.maximum(jnp.sum(obj_t), 1.0)
+
+    total = l_obj + 5.0 * l_box + l_cls
+    return total, {"obj": l_obj, "box": l_box, "cls": l_cls}

@@ -1,0 +1,94 @@
+"""Shared primitive layers: RMSNorm, RoPE, gated MLP, embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import Leaf
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+def rmsnorm_schema(dim: int):
+    return {"scale": Leaf((dim,), ("null",), "ones")}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                    # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, half)
+    cos = jnp.cos(angles)[..., :, None, :]                 # (..., s, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# --------------------------------------------------------------------------
+def mlp_schema(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "wi_gate": Leaf((d, f), ("embed", "ffn"), "fan_in"),
+        "wi_up": Leaf((d, f), ("embed", "ffn"), "fan_in"),
+        "wo": Leaf((f, d), ("ffn", "embed"), "fan_in"),
+    }
+
+
+def mlp(params, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ params["wi_gate"])
+    return (gate * (x @ params["wi_up"])) @ params["wo"]
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+def embed_schema(cfg: ModelConfig):
+    v = cfg.padded_vocab
+    s = {"embedding": Leaf((v, cfg.d_model), ("vocab", "embed"), "normal")}
+    if not cfg.tie_embeddings:
+        s["lm_head"] = Leaf((cfg.d_model, v), ("embed", "vocab"), "fan_in")
+    return s
+
+
+def embed(params, tokens: jax.Array, dtype) -> jax.Array:
+    return params["embedding"].astype(dtype)[tokens]
+
+
+def unembed(params, x: jax.Array, softcap: Optional[float] = None) -> jax.Array:
+    if "lm_head" in params:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    else:
+        logits = x @ params["embedding"].astype(x.dtype).T
+    logits = logits.astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN with top-k routing and grouped, capacity-bounded
+dispatch (GShard-style groups, Megablocks-style sort-based slotting).
+
+Tokens are partitioned into ``groups`` aligned with the mesh's (data, model)
+activation sharding; routing, position assignment and the dispatch scatter
+are *local to a group* (no cross-shard scatter — GSPMD would otherwise
+all-gather the token stream).  The expert-major relayout between the grouped
+buffer and the (experts @ model-axis) compute layout is a plain resharding
+of a materialized tensor, which XLA turns into the canonical MoE all-to-all.
+
+Costs scale with *active* expert compute: position assignment uses a stable
+per-group argsort (O(n log n)) rather than the O(n^2)-in-XLA one-hot cumsum,
+and expert tensors are 2D-sharded (experts x capacity).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import mlp, mlp_schema
+from repro.models.schema import Leaf
+
+
+def moe_schema(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    s = {
+        "router": Leaf((d, e), ("embed", "experts_router"), "fan_in"),
+        "wi_gate": Leaf((e, d, f), ("experts", "embed", "expert_ff"), "fan_in"),
+        "wi_up": Leaf((e, d, f), ("experts", "embed", "expert_ff"), "fan_in"),
+        "wo": Leaf((e, f, d), ("experts", "expert_ff", "embed"), "fan_in"),
+    }
+    if cfg.num_shared_experts:
+        s["shared"] = mlp_schema(cfg, d_ff=cfg.num_shared_experts * f)
+    return s
+
+
+def capacity(cfg: ModelConfig, num_tokens: int,
+             capacity_factor: float = 1.25) -> int:
+    c = math.ceil(num_tokens * cfg.num_experts_per_tok * capacity_factor
+                  / cfg.num_experts)
+    return max(c, 1)
+
+
+def _positions_in_expert(flat_ids: jax.Array, e: int) -> jax.Array:
+    """Stable-sort position assignment within one group. flat_ids (m,)."""
+    m = flat_ids.shape[0]
+    order = jnp.argsort(flat_ids, stable=True)
+    counts = jnp.zeros((e,), jnp.int32).at[flat_ids].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    sorted_ids = flat_ids[order]
+    pos_sorted = jnp.arange(m, dtype=jnp.int32) - starts[sorted_ids]
+    return jnp.zeros((m,), jnp.int32).at[order].set(pos_sorted)
+
+
+def moe_apply(
+    cfg: ModelConfig,
+    params,
+    x: jax.Array,                # (b, s, d)
+    *,
+    capacity_factor: Optional[float] = None,
+    constrain=None,              # fn(x, kind) -> x: sharding constraints
+    groups: Tuple[int, int] = (1, 1),   # (batch groups, seq groups)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y, aux_load_balance_loss)."""
+    def cn(t, kind):
+        return constrain(t, kind) if constrain is not None else t
+
+    b, s, d = x.shape
+    k, e = cfg.num_experts_per_tok, cfg.num_experts
+    gd = groups[0] if b % groups[0] == 0 else 1
+    gm = groups[1] if s % groups[1] == 0 else 1
+    g = gd * gm
+    n_loc = (b // gd) * (s // gm)
+    cf = capacity_factor or cfg.moe_capacity_factor
+    cap = capacity(cfg, n_loc, cf)       # per-group capacity
+
+    # ---- group tokens to match the (batch@data, seq@model) sharding ----
+    xg = x.reshape(gd, b // gd, gm, s // gm, d)
+    xg = xg.transpose(0, 2, 1, 3, 4).reshape(g, n_loc, d)
+    xg = cn(xg, "moe_tokens")            # (g, n_loc, d), g over (data, model)
+
+    router_logits = (xg @ params["router"]).astype(jnp.float32)  # (g, n, e)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate, expert_ids = jax.lax.top_k(probs, k)                   # (g, n, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)          # qwen3 norm
+
+    flat_ids = expert_ids.reshape(g, n_loc * k)
+    pos = jax.vmap(lambda ids: _positions_in_expert(ids, e))(flat_ids)
+    slot = jnp.where(pos < cap, flat_ids * cap + pos, e * cap)   # drop tail
+
+    # ---- local dispatch scatter (group-batched, no cross-shard indices) --
+    x_rep = jnp.repeat(xg, k, axis=1)                            # (g, n*k, d)
+
+    def scatter_one(slots, xs):
+        return jnp.zeros((e * cap, d), x.dtype).at[slots].set(xs, mode="drop")
+
+    buf = jax.vmap(scatter_one)(slot, x_rep)                     # (g, e*cap, d)
+    buf = cn(buf, "moe_buffer")
+
+    # ---- expert-major relayout: THE all-to-all under SPMD ----
+    xe = buf.reshape(g, e, cap, d).transpose(1, 0, 2, 3)         # (e, g, cap, d)
+    xe = cn(xe.reshape(e, g * cap, d), "expert")                 # e over model
+
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["wi_gate"]))
+         * jnp.einsum("ecd,edf->ecf", xe, params["wi_up"]))
+    h = cn(h, "expert_ff")
+    ye = cn(jnp.einsum("ecf,efd->ecd", h, params["wo"]), "expert")
+
+    # ---- reverse relayout + local combine gather ----
+    yb = ye.reshape(e, g, cap, d).transpose(1, 0, 2, 3).reshape(g, e * cap, d)
+    yb = cn(yb, "moe_buffer")
+    safe = jnp.minimum(slot, e * cap - 1)
+    gathered = jnp.take_along_axis(yb, safe[..., None], axis=1)
+    gathered = jnp.where((slot < e * cap)[..., None], gathered, 0.0)
+    yg = (gathered.reshape(g, n_loc, k, d)
+          * gate.astype(x.dtype)[..., None]).sum(axis=2)         # (g, n, d)
+
+    y = yg.reshape(gd, gm, b // gd, s // gm, d).transpose(0, 2, 1, 3, 4)
+    y = y.reshape(b, s, d)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], x)
+
+    # GShard load-balance auxiliary loss: E * sum_e f_e * P_e
+    assign_frac = jnp.mean(
+        jax.nn.one_hot(expert_ids, e, dtype=jnp.float32), axis=(0, 1, 2))
+    prob_mean = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(assign_frac * prob_mean)
+    return y, aux

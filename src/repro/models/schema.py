@@ -1,0 +1,100 @@
+"""Parameter schema: one declaration drives init, sharding specs and shapes.
+
+Every layer module exposes ``schema(cfg) -> tree of Leaf``.  A ``Leaf``
+declares the parameter's shape, *logical* axis names (one per dim) and its
+initializer.  From a schema we derive:
+
+  * ``init(schema, key, dtype)``      -> params pytree (real arrays)
+  * ``abstract(schema, dtype)``       -> ShapeDtypeStruct pytree (dry-run)
+  * ``partition_specs(schema, rules)``-> PartitionSpec pytree
+
+Logical axes used across the framework:
+  embed, ffn, q_dim, kv_dim, vocab, experts, expert_ff, lora, rope,
+  ssm_inner, ssm_state, ssm_heads, conv, ctx, feat, grid, classes, null
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+
+class Leaf(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | fan_in | small_a
+    scale: float = 1.0
+
+    def __post_init__(self):  # pragma: no cover - NamedTuple lacks this hook
+        pass
+
+
+def _check(leaf: Leaf) -> None:
+    if len(leaf.shape) != len(leaf.axes):
+        raise ValueError(f"leaf rank mismatch: {leaf}")
+
+
+def _init_leaf(leaf: Leaf, key: jax.Array, dtype) -> jax.Array:
+    _check(leaf)
+    if leaf.init == "zeros":
+        return jnp.zeros(leaf.shape, dtype)
+    if leaf.init == "ones":
+        return jnp.ones(leaf.shape, dtype)
+    if leaf.init == "normal":
+        return (jax.random.normal(key, leaf.shape) * 0.02 * leaf.scale).astype(dtype)
+    if leaf.init == "fan_in":
+        fan_in = leaf.shape[-2] if len(leaf.shape) > 1 else 1
+        return (jax.random.normal(key, leaf.shape)
+                / math.sqrt(max(fan_in, 1)) * leaf.scale).astype(dtype)
+    if leaf.init == "small_a":   # mamba A_log init: log(uniform[1,16])
+        u = jax.random.uniform(key, leaf.shape, minval=1.0, maxval=16.0)
+        return jnp.log(u).astype(dtype)
+    raise ValueError(f"unknown init {leaf.init!r}")
+
+
+def is_leaf(x: Any) -> bool:
+    return isinstance(x, Leaf)
+
+
+def init(schema, key: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_leaf)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(l, k, dtype) for l, k in zip(leaves, keys)])
+
+
+def abstract(schema, dtype=jnp.float32, prepend: Tuple[int, ...] = ()):
+    """ShapeDtypeStruct tree (optionally with a stacked leading dim)."""
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(prepend + l.shape, dtype),
+        schema, is_leaf=is_leaf)
+
+
+def stack(schema, n: int):
+    """Schema with a stacked leading (scan) dimension."""
+    return jax.tree.map(
+        lambda l: Leaf((n,) + l.shape, ("layers",) + l.axes, l.init, l.scale),
+        schema, is_leaf=is_leaf)
+
+
+def partition_specs(schema, rules: Dict[str, Any]):
+    def spec(l: Leaf) -> PartitionSpec:
+        entries = []
+        for ax in l.axes:
+            r = rules.get(ax) if ax is not None else None
+            entries.append(r)
+        return PartitionSpec(*entries)
+    return jax.tree.map(spec, schema, is_leaf=is_leaf)
+
+
+def param_bytes(schema, bytes_per_param: int = 4) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=is_leaf)
+    return sum(math.prod(l.shape) for l in leaves) * bytes_per_param
+
+
+def map_with_key(fn: Callable, schema):
+    """Apply fn(leaf) over a schema tree (convenience)."""
+    return jax.tree.map(fn, schema, is_leaf=is_leaf)

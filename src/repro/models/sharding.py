@@ -1,0 +1,110 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Parameters carry *logical* axis names (see ``repro.models.schema``); a rules
+dict maps each logical axis to a mesh axis (or tuple of axes, or None).  The
+defaults implement FSDP(+pod) x tensor parallelism:
+
+  * weight ``embed`` dims shard over the fsdp axes ("data", and "pod" when
+    multi-pod) — ZeRO-3 style, so optimizer state for 100B+ configs fits;
+  * weight ``ffn`` / ``q_dim`` / ``kv_dim`` / ``vocab`` / ``experts`` /
+    ``ssm_inner`` dims shard over "model" — tensor/expert parallelism;
+  * activations: batch over (pod, data); sequence over "model" between layer
+    boundaries (sequence parallelism) for train/prefill; decode shards the
+    KV-cache sequence dim over "model" instead (flash-decode style).
+
+Every rule is overridable — the §Perf hillclimb iterates exactly here.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def default_rules(
+    shape: ShapeConfig,
+    *,
+    multi_pod: bool = False,
+    overrides: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    fsdp = ("pod", "data") if multi_pod else ("data",)
+    batch = ("pod", "data") if multi_pod else ("data",)
+
+    rules: Dict[str, Any] = {
+        # ---- weights ----
+        "embed": fsdp,
+        "ffn": "model",
+        "q_dim": "model",
+        "kv_dim": "model",
+        "vocab": "model",
+        "experts": "model",
+        "experts_router": None,
+        "expert_ff": None,
+        "lora": None,
+        "rope": None,
+        "ssm_inner": "model",
+        "ssm_heads": None,
+        "ssm_state": None,
+        "conv": None,
+        "ctx": None,
+        "null": None,
+        "layers": None,
+        # ---- activations ----
+        "act_batch": batch,
+        "act_seq": "model" if shape.mode in ("train", "prefill") else None,
+        "act_embed": None,
+        # ---- caches ----
+        "cache_batch": batch,
+        "cache_seq": "model" if shape.mode == "decode" else None,
+        "kv_heads_cache": None,
+        "ssm_heads_cache": "model",
+        "ssm_inner_cache": "model",
+    }
+    # ---- §Perf-confirmed per-mode defaults (EXPERIMENTS.md) ----
+    if shape.mode == "train" and not multi_pod:
+        # P1-I1: pure-FSDP/ZeRO-3 — batch over ALL chips, full seq per
+        # device; replaces per-matmul activation all-reduces with per-layer
+        # weight all-gathers (3.6x lower collective on qwen1.5-110b).
+        # (multi-pod keeps batch@(pod,data)+seq@model: global_batch=256
+        # does not divide 512 chips.)
+        if shape.global_batch % 256 == 0:
+            rules["act_batch"] = ("data", "model")
+            rules["act_seq"] = None
+    if shape.mode == "decode":
+        # P2-I1/I2: decode wants weights resident — shard the residual
+        # d_model over "data" so every matmul contracts locally and emits
+        # tiny all-reduces instead of gathering weights (108x lower
+        # collective on qwen3-moe decode_32k).
+        rules["act_batch"] = None
+        rules["act_embed"] = "data"
+    if shape.mode == "decode" and shape.global_batch == 1:
+        # long-context decode: nothing to data-shard on batch; put the huge
+        # cache sequence over BOTH axes and keep activations replicated.
+        rules["cache_batch"] = None
+        rules["cache_seq"] = (fsdp[-1], "model") if not multi_pod else \
+            ("data", "model")
+        rules["ssm_heads_cache"] = "model"
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def activation_spec(rules: Dict[str, Any]) -> PartitionSpec:
+    """Residual-stream constraint (batch, seq, embed)."""
+    return PartitionSpec(rules.get("act_batch"), rules.get("act_seq"),
+                         rules.get("act_embed"))
+
+
+def token_spec(rules: Dict[str, Any]) -> PartitionSpec:
+    return PartitionSpec(rules.get("act_batch"), rules.get("act_seq"))
+
+
+def ctx_spec(rules: Dict[str, Any]) -> PartitionSpec:
+    return PartitionSpec(rules.get("act_batch"), None, None)
+
+
+def logits_spec(rules: Dict[str, Any]) -> PartitionSpec:
+    return PartitionSpec(rules.get("act_batch"), rules.get("act_seq"),
+                         "model")

@@ -1,0 +1,33 @@
+"""Modality-frontend stubs (the one sanctioned carve-out).
+
+The ViT/SigLIP vision encoder (VLM) and the mel-spectrogram + conv feature
+extractor (audio) are NOT implemented; per the assignment they are stubs that
+provide precomputed patch/frame embeddings of the correct shape.  The
+language/decoder transformer that *consumes* these embeddings is fully
+implemented (projector included) in ``repro.models.transformer``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_embeddings(cfg: ModelConfig, batch: int,
+                        key: jax.Array | None = None,
+                        dtype=jnp.float32) -> jax.Array:
+    """Deterministic pseudo patch/frame embeddings (b, n_ctx, ctx_dim)."""
+    if not cfg.num_ctx_tokens:
+        raise ValueError(f"{cfg.name} has no modality frontend")
+    d = cfg.ctx_dim or cfg.d_model
+    if key is None:
+        key = jax.random.PRNGKey(hash(cfg.name) % (2 ** 31))
+    return (jax.random.normal(key, (batch, cfg.num_ctx_tokens, d))
+            .astype(dtype) * 0.02)
+
+
+def frontend_spec(cfg: ModelConfig, batch: int,
+                  dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    d = cfg.ctx_dim or cfg.d_model
+    return jax.ShapeDtypeStruct((batch, cfg.num_ctx_tokens, d), dtype)

@@ -1,0 +1,433 @@
+"""Generic decoder stack covering all assigned architecture families.
+
+The layer stack is ``prefix_layers + num_blocks * block_pattern +
+suffix_layers``; the repeated pattern runs as one ``lax.scan`` unit with
+stacked parameters (bounding HLO size and compile time for 80-100 layer
+configs).  Shared-weight attention blocks (zamba2) close over a single
+parameter set but keep per-occurrence KV caches inside the scanned cache.
+
+Public API (all pure functions):
+  init_params / abstract_params / param_partition_specs
+  init_cache / abstract_cache / cache_partition_specs
+  forward(cfg, params, tokens, ...)   -> (logits, new_cache, aux)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, CROSS, LOCAL, MOE, SHARED_ATTN, SSM,
+                                SSM_FFN, ModelConfig)
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import schema as sch
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (embed, embed_schema, mlp, mlp_schema,
+                                 rmsnorm, rmsnorm_schema, unembed)
+from repro.models.schema import Leaf
+
+
+# ---------------------------------------------------------------------------
+# Per-kind schemas
+# ---------------------------------------------------------------------------
+def _mixer_schema(cfg: ModelConfig):
+    return attn_mod.mla_schema(cfg) if cfg.mla else attn_mod.attn_schema(cfg)
+
+
+def layer_schema(cfg: ModelConfig, kind: str):
+    d = cfg.d_model
+    if kind in (ATTN, LOCAL, SHARED_ATTN):
+        return {"ln": rmsnorm_schema(d), "attn": _mixer_schema(cfg),
+                "ln2": rmsnorm_schema(d), "mlp": mlp_schema(cfg)}
+    if kind == MOE:
+        return {"ln": rmsnorm_schema(d), "attn": _mixer_schema(cfg),
+                "ln2": rmsnorm_schema(d), "moe": moe_mod.moe_schema(cfg)}
+    if kind == SSM:
+        return {"ln": rmsnorm_schema(d), "ssm": ssm_mod.ssm_schema(cfg)}
+    if kind == SSM_FFN:
+        return {"ln": rmsnorm_schema(d), "ssm": ssm_mod.ssm_schema(cfg),
+                "ln2": rmsnorm_schema(d), "mlp": mlp_schema(cfg)}
+    if kind == CROSS:
+        return {"ln": rmsnorm_schema(d), "attn": _mixer_schema(cfg),
+                "ln2": rmsnorm_schema(d),
+                "xattn": attn_mod.cross_attn_schema(cfg),
+                "ln3": rmsnorm_schema(d), "mlp": mlp_schema(cfg)}
+    raise ValueError(kind)
+
+
+def layer_cache_shapes(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    """Shape dict (or {}) for one layer's decode cache."""
+    if kind in (ATTN, LOCAL, MOE, CROSS, SHARED_ATTN):
+        if cfg.mla:
+            return attn_mod.mla_cache_spec(cfg, batch, max_seq)
+        return attn_mod.attn_cache_spec(cfg, batch, max_seq)
+    if kind in (SSM, SSM_FFN):
+        return ssm_mod.ssm_cache_spec(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Model schema
+# ---------------------------------------------------------------------------
+def model_schema(cfg: ModelConfig):
+    s: Dict[str, Any] = {"embed": embed_schema(cfg)}
+    if cfg.num_ctx_tokens:
+        ctx_dim = cfg.ctx_dim or cfg.d_model
+        s["ctx_proj"] = Leaf((ctx_dim, cfg.d_model), ("ctx", "embed"),
+                             "fan_in")
+    if cfg.prefix_layers:
+        s["prefix"] = {str(i): layer_schema(cfg, k)
+                       for i, k in enumerate(cfg.prefix_layers)}
+    unit = {str(i): (layer_schema(cfg, k) if k != SHARED_ATTN else {})
+            for i, k in enumerate(cfg.block_pattern)}
+    s["blocks"] = sch.stack(unit, cfg.num_blocks)
+    if SHARED_ATTN in cfg.block_pattern:
+        s["shared"] = layer_schema(cfg, SHARED_ATTN)
+    if cfg.suffix_layers:
+        s["suffix"] = {str(i): layer_schema(cfg, k)
+                       for i, k in enumerate(cfg.suffix_layers)}
+    s["final_norm"] = rmsnorm_schema(cfg.d_model)
+    return s
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    return sch.init(model_schema(cfg), key, dtype)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return sch.abstract(model_schema(cfg), dtype)
+
+
+def param_partition_specs(cfg: ModelConfig, rules: Dict[str, Any]):
+    return sch.partition_specs(model_schema(cfg), rules)
+
+
+def block_unit_specs(cfg: ModelConfig, rules: Dict[str, Any]):
+    """Partition specs for ONE scan-body block unit (unstacked) — used for
+    use-site weight resharding (two-level FSDP gather, EXPERIMENTS §Perf)."""
+    unit = {str(i): (layer_schema(cfg, k) if k != SHARED_ATTN else {})
+            for i, k in enumerate(cfg.block_pattern)}
+    return sch.partition_specs(unit, rules)
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+def _cache_shapes(cfg: ModelConfig, batch: int, max_seq: int):
+    out: Dict[str, Any] = {}
+    if cfg.prefix_layers:
+        out["prefix"] = {str(i): layer_cache_shapes(cfg, k, batch, max_seq)
+                         for i, k in enumerate(cfg.prefix_layers)}
+    unit = {str(i): layer_cache_shapes(cfg, k, batch, max_seq)
+            for i, k in enumerate(cfg.block_pattern)}
+    out["blocks"] = jax.tree.map(lambda shp: (cfg.num_blocks,) + shp, unit,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    if cfg.suffix_layers:
+        out["suffix"] = {str(i): layer_cache_shapes(cfg, k, batch, max_seq)
+                         for i, k in enumerate(cfg.suffix_layers)}
+    return out
+
+
+def _cache_dtype(name: str, dtype):
+    # SSM recurrent states stay fp32 for numerical fidelity
+    return jnp.float32 if name == "state" else dtype
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32):
+    shapes = _cache_shapes(cfg, batch, max_seq)
+    return jax.tree.map_with_path(
+        lambda p, shp: jnp.zeros(shp, _cache_dtype(p[-1].key, dtype)),
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16):
+    shapes = _cache_shapes(cfg, batch, max_seq)
+    return jax.tree.map_with_path(
+        lambda p, shp: jax.ShapeDtypeStruct(shp, _cache_dtype(p[-1].key, dtype)),
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+_CACHE_AXES = {
+    "k": ("cache_batch", "cache_seq", "kv_heads_cache", None),
+    "v": ("cache_batch", "cache_seq", "kv_heads_cache", None),
+    "c_kv": ("cache_batch", "cache_seq", None),
+    "k_rope": ("cache_batch", "cache_seq", None),
+    "state": ("cache_batch", "ssm_heads_cache", None, None),
+    "conv": ("cache_batch", None, "ssm_inner_cache"),
+}
+
+
+def cache_partition_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                          rules: Dict[str, Any]):
+    from jax.sharding import PartitionSpec
+
+    shapes = _cache_shapes(cfg, batch, max_seq)
+
+    def spec(path, shp):
+        name = path[-1].key
+        axes = _CACHE_AXES[name]
+        stacked = len(shp) == len(axes) + 1
+        entries = [rules.get(a) if a else None for a in axes]
+        if stacked:
+            entries = [None] + entries
+        return PartitionSpec(*entries)
+
+    return jax.tree.map_with_path(spec, shapes,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+def _apply_layer(cfg: ModelConfig, kind: str, params, x, *, positions, ctx,
+                 cache, cache_index, impl, act_constraint=None,
+                 moe_groups=(1, 1)) -> Tuple[jax.Array, Any, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.sliding_window if kind == LOCAL else None
+    c = cache if cache else None
+
+    if kind in (SSM, SSM_FFN):
+        h, new_c = ssm_mod.ssm_apply(cfg, params["ssm"],
+                                     rmsnorm(params["ln"], x, cfg.norm_eps),
+                                     cache=c, cache_index=cache_index,
+                                     impl=impl)
+        x = x + h
+        if kind == SSM_FFN:
+            x = x + mlp(params["mlp"], rmsnorm(params["ln2"], x, cfg.norm_eps))
+        return x, (new_c if new_c is not None else {}), aux
+
+    # attention-bearing kinds
+    h_in = rmsnorm(params["ln"], x, cfg.norm_eps)
+    if cfg.mla:
+        h, new_c = attn_mod.mla_attention(cfg, params["attn"], h_in, positions,
+                                          cache=c, cache_index=cache_index,
+                                          impl=impl)
+    else:
+        h, new_c = attn_mod.self_attention(cfg, params["attn"], h_in,
+                                           positions, window=window, cache=c,
+                                           cache_index=cache_index, impl=impl)
+    x = x + h
+
+    if kind == CROSS:
+        x = x + attn_mod.cross_attention(
+            cfg, params["xattn"], rmsnorm(params["ln2"], x, cfg.norm_eps),
+            ctx, impl=impl)
+        x = x + mlp(params["mlp"], rmsnorm(params["ln3"], x, cfg.norm_eps))
+    elif kind == MOE:
+        h, aux = moe_mod.moe_apply(cfg, params["moe"],
+                                   rmsnorm(params["ln2"], x, cfg.norm_eps),
+                                   constrain=act_constraint,
+                                   groups=moe_groups)
+        x = x + h
+    else:
+        x = x + mlp(params["mlp"], rmsnorm(params["ln2"], x, cfg.norm_eps))
+    return x, (new_c if new_c is not None else {}), aux
+
+
+def _apply_unit(cfg: ModelConfig, unit_params, shared_params, x, unit_cache,
+                *, positions, ctx, cache_index, impl, act_constraint=None,
+                moe_groups=(1, 1)):
+    new_cache = {}
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.block_pattern):
+        p = shared_params if kind == SHARED_ATTN else unit_params[str(i)]
+        c = unit_cache.get(str(i)) if unit_cache is not None else None
+        x, nc, a = _apply_layer(cfg, kind, p, x, positions=positions, ctx=ctx,
+                                cache=c, cache_index=cache_index, impl=impl,
+                                act_constraint=act_constraint,
+                                moe_groups=moe_groups)
+        new_cache[str(i)] = nc
+        aux = aux + a
+    if act_constraint is not None:
+        x = act_constraint(x, "residual")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def forward(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,                   # (b, s) int32
+    *,
+    ctx_embed: Optional[jax.Array] = None,   # (b, n_ctx, ctx_dim)
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    impl: str = "ref",
+    remat: bool = False,
+    act_constraint=None,                 # fn(x)->x, e.g. sharding constraint
+    unroll_blocks: bool = False,         # python loop instead of lax.scan
+    moe_groups: Tuple[int, int] = (1, 1),
+    last_token_only: bool = False,       # unembed only the final position
+    block_param_constraint=None,         # fn(block_params) -> block_params
+    dtype=jnp.float32,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (logits (b,s,V) fp32, new_cache, aux_loss)."""
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, dtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+
+    if cache_index is None:
+        cache_index = jnp.zeros((), jnp.int32)
+    cache_index = jnp.asarray(cache_index, jnp.int32)
+    if positions is None:
+        base = (cache_index[:, None] if cache_index.ndim == 1
+                else cache_index)
+        positions = base + jnp.arange(s, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(positions, (b, s))
+
+    ctx = None
+    if cfg.num_ctx_tokens:
+        if ctx_embed is None:
+            raise ValueError(f"{cfg.name} requires ctx_embed (frontend stub)")
+        ctx = (ctx_embed.astype(dtype) @ params["ctx_proj"].astype(dtype)
+               if "ctx_proj" in params else ctx_embed.astype(dtype))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+
+    # ---- prefix layers (unscanned) ----
+    if cfg.prefix_layers:
+        new_cache["prefix"] = {}
+        for i, kind in enumerate(cfg.prefix_layers):
+            c = cache["prefix"][str(i)] if cache is not None else None
+            x, nc, a = _apply_layer(cfg, kind, params["prefix"][str(i)], x,
+                                    positions=positions, ctx=ctx, cache=c,
+                                    cache_index=cache_index, impl=impl,
+                                    act_constraint=act_constraint,
+                                    moe_groups=moe_groups)
+            new_cache["prefix"][str(i)] = nc
+            aux_total = aux_total + a
+
+    # ---- scanned blocks ----
+    shared = params.get("shared")
+    unit = functools.partial(_apply_unit, cfg, shared_params=shared,
+                             positions=positions, ctx=ctx,
+                             cache_index=cache_index, impl=impl,
+                             act_constraint=act_constraint,
+                             moe_groups=moe_groups)
+
+    if unroll_blocks:
+        # python-level loop (dry-run cost probes: XLA's cost_analysis counts
+        # a while-loop body once regardless of trip count); remat applies per
+        # block exactly as in the scan path so probe flops match
+        def unit_fwd(bp, bc, x):
+            return unit(bp, x=x, unit_cache=bc)
+
+        unit_fn = jax.checkpoint(unit_fwd) if remat else unit_fwd
+        ncs = []
+        for i in range(cfg.num_blocks):
+            bp = jax.tree.map(lambda p: p[i], params["blocks"])
+            if block_param_constraint is not None:
+                bp = block_param_constraint(bp)
+            bc = (jax.tree.map(lambda c: c[i], cache["blocks"])
+                  if cache is not None else None)
+            x, nc, a = unit_fn(bp, bc, x)
+            aux_total = aux_total + a
+            ncs.append(nc)
+        if cache is not None:
+            new_cache["blocks"] = jax.tree.map(
+                lambda *ls: jnp.stack(ls), *ncs)
+    elif cache is not None:
+        def body(carry, xs):
+            x, aux = carry
+            block_params, block_cache = xs
+            if block_param_constraint is not None:
+                block_params = block_param_constraint(block_params)
+            x, nc, a = unit(block_params, x=x, unit_cache=block_cache)
+            return (x, aux + a), nc
+
+        body_fn = jax.checkpoint(body) if remat else body
+        (x, aux_total), new_cache["blocks"] = jax.lax.scan(
+            body_fn, (x, aux_total), (params["blocks"], cache["blocks"]))
+    else:
+        def body(carry, block_params):
+            x, aux = carry
+            if block_param_constraint is not None:
+                block_params = block_param_constraint(block_params)
+            x, _, a = unit(block_params, x=x, unit_cache=None)
+            return (x, aux + a), None
+
+        body_fn = jax.checkpoint(body) if remat else body
+        (x, aux_total), _ = jax.lax.scan(body_fn, (x, aux_total),
+                                         params["blocks"])
+
+    # ---- suffix layers ----
+    if cfg.suffix_layers:
+        new_cache["suffix"] = {}
+        for i, kind in enumerate(cfg.suffix_layers):
+            c = cache["suffix"][str(i)] if cache is not None else None
+            x, nc, a = _apply_layer(cfg, kind, params["suffix"][str(i)], x,
+                                    positions=positions, ctx=ctx, cache=c,
+                                    cache_index=cache_index, impl=impl,
+                                    act_constraint=act_constraint,
+                                    moe_groups=moe_groups)
+            new_cache["suffix"][str(i)] = nc
+            aux_total = aux_total + a
+
+    if last_token_only:
+        x = x[:, -1:]                    # prefill: only the next-token logits
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, softcap=cfg.logit_softcap)
+    return logits, (new_cache if cache is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Loss / steps (pure; pjit wrapping happens in launch/ and training/)
+# ---------------------------------------------------------------------------
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            *, impl: str = "ref", remat: bool = True, act_constraint=None,
+            unroll_blocks: bool = False, moe_groups=(1, 1),
+            block_param_constraint=None,
+            dtype=jnp.float32) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, _, aux = forward(cfg, params, batch["tokens"],
+                             ctx_embed=batch.get("ctx_embed"),
+                             impl=impl, remat=remat,
+                             act_constraint=act_constraint,
+                             unroll_blocks=unroll_blocks,
+                             moe_groups=moe_groups,
+                             block_param_constraint=block_param_constraint,
+                             dtype=dtype)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = ce + cfg.router_aux_loss * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, cache_index,
+                *, ctx_embed=None, impl: str = "ref", act_constraint=None,
+                unroll_blocks: bool = False, moe_groups=(1, 1),
+                dtype=jnp.float32):
+    """One serving decode step: (b,1) token + cache -> logits + new cache."""
+    logits, new_cache, _ = forward(cfg, params, tokens, ctx_embed=ctx_embed,
+                                   cache=cache, cache_index=cache_index,
+                                   impl=impl, act_constraint=act_constraint,
+                                   unroll_blocks=unroll_blocks,
+                                   moe_groups=moe_groups, dtype=dtype)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, *, ctx_embed=None,
+            impl: str = "ref", act_constraint=None,
+            unroll_blocks: bool = False, moe_groups=(1, 1),
+            dtype=jnp.float32):
+    """Prefill a fresh cache with a full prompt; returns last-token logits."""
+    zero = jnp.zeros((), jnp.int32)
+    logits, new_cache, _ = forward(cfg, params, tokens, ctx_embed=ctx_embed,
+                                   cache=cache, cache_index=zero, impl=impl,
+                                   act_constraint=act_constraint,
+                                   unroll_blocks=unroll_blocks,
+                                   moe_groups=moe_groups,
+                                   last_token_only=True, dtype=dtype)
+    return logits[:, -1], new_cache

@@ -1,0 +1,178 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware needed).
+
+Three terms per (arch, shape, mesh):
+
+  compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+parsed from the post-SPMD HLO text: for each all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op we take the (per-device)
+result tensor size and apply the ring-algorithm byte multiplier:
+
+  all-gather         result ~ full gathered tile     x (g-1)/g  ~ 1
+  all-reduce         2 x result (reduce + broadcast phases)
+  reduce-scatter     result x (g-1)  (operand = g x result is streamed)
+  all-to-all         result x (g-1)/g
+  collective-permute result
+
+where g = replica-group size parsed from the op attributes (fallback 2).
+cost_analysis FLOPs are per-device for SPMD modules, so `chips` stays in the
+denominator only through per-chip peaks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.roofline.hw import ChipSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(?)((?:[a-z0-9]+\[[0-9,]*\][^ ]*(?:,\s*)?)+)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+_MULTIPLIER = {
+    "all-gather": lambda g: (g - 1) / g,
+    "all-reduce": lambda g: 2 * (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1),
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """Returns (total per-device link bytes, per-op-kind breakdown)."""
+    per_kind: Dict[str, float] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:   # async pair: count the -start only
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        nbytes = _tensor_bytes(type_str)
+        g = _group_size(line)
+        moved = nbytes * _MULTIPLIER[kind](g)
+        per_kind[kind] = per_kind.get(kind, 0.0) + moved
+    return sum(per_kind.values()), per_kind
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, float]
+    model_flops: float
+    bytes_per_device: float = 0.0
+    peak_memory_per_device: float = 0.0
+
+    chip: ChipSpec = TPU_V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / self.chip.peak_flops_bf16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / self.chip.hbm_bandwidth
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.chip.ici_link_bandwidth
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("chip")
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, dominant=self.dominant,
+                 useful_flops_ratio=self.useful_flops_ratio)
+        return d
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (forward-only), N = active
+    params, D = tokens processed in the step."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch * 1          # decode: one token
+
+
+def analyze_compiled(compiled, lowered_text: str, *, arch: str, shape,
+                     cfg, mesh_name: str, chips: int) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll, breakdown = collective_bytes(lowered_text)
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    if mem is not None:
+        peak = (getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0))
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=nbytes, coll_bytes=coll,
+        coll_breakdown=breakdown, model_flops=model_flops(cfg, shape),
+        peak_memory_per_device=peak)

@@ -1,0 +1,22 @@
+"""Target-hardware constants (TPU v5e) for the roofline model."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float       # FLOP/s per chip
+    hbm_bandwidth: float         # bytes/s per chip
+    hbm_bytes: float             # HBM capacity per chip
+    ici_link_bandwidth: float    # bytes/s per link
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    hbm_bytes=16e9,
+    ici_link_bandwidth=50e9,
+)

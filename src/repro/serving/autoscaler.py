@@ -1,0 +1,34 @@
+"""Provisioner / autoscaler (Fig. 16): scale the cloud GPU pool with load."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class Autoscaler:
+    min_devices: int = 1
+    max_devices: int = 8
+    target_queue_per_device: float = 2.0
+    scale_down_queue: float = 0.5
+    cooldown_s: float = 2.0
+
+    _last_change: float = -1e9
+    history: List[Dict[str, float]] = field(default_factory=list)
+
+    def decide(self, now: float, queue_len: int, devices: int) -> int:
+        """Returns the new device count."""
+        new = devices
+        per_dev = queue_len / max(devices, 1)
+        if per_dev > self.target_queue_per_device:
+            new = min(self.max_devices, devices + 1 + int(
+                per_dev // (2 * self.target_queue_per_device)))
+        elif per_dev < self.scale_down_queue and devices > self.min_devices:
+            new = devices - 1
+        if new != devices and now - self._last_change < self.cooldown_s:
+            new = devices
+        if new != devices:
+            self._last_change = now
+        self.history.append({"t": now, "queue": queue_len,
+                             "devices": devices, "new_devices": new})
+        return new

@@ -1,0 +1,82 @@
+"""Dynamic batching (Clipper-style, §IV.B last paragraph).
+
+Requests accumulate until ``max_batch`` or ``max_delay`` elapses (simulated
+clock).  Used by the fog classifier (variable region counts per chunk) and
+by the LLM serving loop.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class QueuedRequest:
+    payload: Any
+    arrival: float
+    request_id: int
+
+
+@dataclass
+class DynamicBatcher:
+    max_batch: int = 16
+    max_delay: float = 0.02           # seconds (simulated)
+    pad_to_buckets: Tuple[int, ...] = (1, 2, 4, 8, 16)
+
+    _queue: List[QueuedRequest] = field(default_factory=list)
+    _next_id: int = 0
+    stats: Dict[str, float] = field(default_factory=lambda: {
+        "batches": 0, "requests": 0, "padded": 0})
+
+    def submit(self, payload: Any, now: float) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(QueuedRequest(payload, now, rid))
+        return rid
+
+    def ready(self, now: float) -> bool:
+        if not self._queue:
+            return False
+        return (len(self._queue) >= self.max_batch
+                or now - self._queue[0].arrival >= self.max_delay)
+
+    def bucket(self, n: int) -> int:
+        for b in self.pad_to_buckets:
+            if n <= b:
+                return b
+        return self.pad_to_buckets[-1]
+
+    def take_batch(self, now: float) -> List[QueuedRequest]:
+        batch = self._queue[: self.max_batch]
+        self._queue = self._queue[self.max_batch:]
+        b = self.bucket(len(batch))
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(batch)
+        self.stats["padded"] += b - len(batch)
+        return batch
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+
+def batch_crops(crops: np.ndarray, valid: np.ndarray,
+                buckets: Tuple[int, ...] = (4, 8, 16, 32, 64)
+                ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Pack the valid crops of one chunk into a padded batch.
+
+    Returns (batch, index_map, padded_size); index_map recovers the original
+    (frame, region) position of each batch row."""
+    idx = np.argwhere(valid)
+    n = len(idx)
+    size = next((b for b in buckets if n <= b), buckets[-1])
+    if n == 0:
+        return (np.zeros((buckets[0],) + crops.shape[2:], crops.dtype),
+                np.zeros((0, 2), np.int64), buckets[0])
+    take = idx[:size]
+    batch = crops[take[:, 0], take[:, 1]]
+    if len(batch) < size:
+        pad = np.zeros((size - len(batch),) + batch.shape[1:], batch.dtype)
+        batch = np.concatenate([batch, pad])
+    return batch, take, size

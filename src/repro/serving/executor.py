@@ -1,0 +1,80 @@
+"""Function executor over a (simulated) accelerator pool.
+
+Runs registered functions; wall-time per call comes either from real CPU
+measurement (``measure=True``) or from the device profile model (TPU/GPU
+targets).  This is the stateless-server execution layer of Fig. 3.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.bandwidth import DeviceProfile
+from repro.serving.registry import FunctionRegistry
+
+
+@dataclass
+class ExecutionRecord:
+    fn_name: str
+    start: float
+    duration: float
+    device: str
+    ok: bool = True
+
+
+@dataclass
+class Executor:
+    """One node's executor (cloud or fog)."""
+    name: str
+    registry: FunctionRegistry
+    profile: DeviceProfile
+    num_devices: int = 1
+    measure: bool = False          # True: wall-clock; False: profile model
+
+    clock: float = 0.0
+    busy_until: List[float] = None
+    records: List[ExecutionRecord] = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.busy_until is None:
+            self.busy_until = [0.0] * self.num_devices
+
+    # -- device pool -------------------------------------------------------
+    def scale_to(self, n: int) -> None:
+        n = max(1, n)
+        if n > len(self.busy_until):
+            self.busy_until += [self.clock] * (n - len(self.busy_until))
+        else:
+            self.busy_until = self.busy_until[:n]
+        self.num_devices = n
+
+    def _acquire(self, now: float) -> Tuple[int, float]:
+        i = min(range(len(self.busy_until)), key=lambda j: self.busy_until[j])
+        return i, max(now, self.busy_until[i])
+
+    # -- execution ----------------------------------------------------------
+    def run(self, fn_name: str, *args, now: Optional[float] = None,
+            model_time: Optional[float] = None, **kw) -> Tuple[Any, float]:
+        """Execute; returns (result, completion_time)."""
+        now = self.clock if now is None else now
+        fn = self.registry.get(fn_name)
+        dev, start = self._acquire(now)
+        t0 = time.perf_counter()
+        result = fn(*args, **kw)
+        wall = time.perf_counter() - t0
+        dur = wall if self.measure else (
+            model_time if model_time is not None else wall)
+        done = start + dur
+        self.busy_until[dev] = done
+        self.clock = max(self.clock, done)
+        self.records.append(ExecutionRecord(fn_name, start, dur,
+                                            f"{self.name}/dev{dev}"))
+        return result, done
+
+    def utilization(self, horizon: float) -> float:
+        if horizon <= 0:
+            return 0.0
+        busy = sum(r.duration for r in self.records
+                   if r.start >= self.clock - horizon)
+        return min(1.0, busy / (horizon * max(self.num_devices, 1)))

@@ -1,0 +1,38 @@
+"""Fault tolerance (Fig. 15): detect cloud disconnection, fail over to the
+fog-local backup detector (YOLOv3 role), resume when the cloud recovers."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from repro.core.bandwidth import NetworkModel
+
+
+@dataclass
+class FaultTolerantCoordinator:
+    network: NetworkModel
+    heartbeat_interval: float = 1.0
+    failure_threshold: int = 2      # missed heartbeats before failover
+
+    missed: int = 0
+    mode: str = "cloud"             # "cloud" | "fog-fallback"
+    events: List[dict] = field(default_factory=list)
+
+    def heartbeat(self, now: float) -> str:
+        """Poll the cloud link; returns the current serving mode."""
+        if self.network.up:
+            if self.mode != "cloud":
+                self.events.append({"t": now, "event": "recovered"})
+            self.missed = 0
+            self.mode = "cloud"
+        else:
+            self.missed += 1
+            if self.missed >= self.failure_threshold and self.mode == "cloud":
+                self.mode = "fog-fallback"
+                self.events.append({"t": now, "event": "failover"})
+        return self.mode
+
+    def route(self, now: float, cloud_fn: Callable, fog_fn: Callable):
+        """Run the chunk through whichever tier is healthy."""
+        mode = self.heartbeat(now)
+        return (cloud_fn() if mode == "cloud" else fog_fn()), mode

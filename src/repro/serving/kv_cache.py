@@ -1,0 +1,71 @@
+"""KV-cache slot management for continuous-batching LLM serving.
+
+A fixed pool of batch slots, each holding one request's cache region; frees
+and reuses slots as requests finish (the fixed-shape, jit-stable analog of
+paged attention for this framework's serving loop).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+
+@dataclass
+class SlotState:
+    request_id: Optional[int] = None
+    length: int = 0               # tokens currently in the cache
+    done: bool = True
+
+
+@dataclass
+class CachePool:
+    cfg: ModelConfig
+    num_slots: int
+    max_seq: int
+    dtype: object = jnp.float32
+
+    cache: object = None
+    slots: List[SlotState] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.cache = tfm.init_cache(self.cfg, self.num_slots, self.max_seq,
+                                    self.dtype)
+        self.slots = [SlotState() for _ in range(self.num_slots)]
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.done]
+
+    def allocate(self, request_id: int) -> Optional[int]:
+        free = self.free_slots()
+        if not free:
+            return None
+        i = free[0]
+        self.slots[i] = SlotState(request_id, 0, False)
+        return i
+
+    def release(self, slot: int) -> None:
+        self.slots[slot] = SlotState()
+
+    def lengths(self) -> np.ndarray:
+        return np.asarray([s.length for s in self.slots], np.int32)
+
+    def write_prefill(self, slot: int, new_cache, length: int) -> None:
+        """Copy one request's prefilled cache row into the pool."""
+        def upd(path, pool_leaf, new_leaf):
+            # "blocks" caches are stacked (num_blocks, batch, ...); prefix /
+            # suffix caches have batch first.
+            bdim = 1 if path[0].key == "blocks" else 0
+            idx = [slice(None)] * pool_leaf.ndim
+            idx[bdim] = slot
+            return pool_leaf.at[tuple(idx)].set(
+                jnp.take(new_leaf, 0, axis=bdim))
+
+        self.cache = jax.tree.map_with_path(upd, self.cache, new_cache)
+        self.slots[slot].length = length

@@ -1,0 +1,111 @@
+"""Function manager + model zoo (stateful backend, §III.D).
+
+The serverless surface: users register video/ML functions and models; the
+dispatcher deploys them to cloud or fog nodes.  The model zoo persists
+checkpoints through ``repro.training.checkpoint`` (the MongoDB role) and
+records profiler results per device (the model profiler of the global
+control plane).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.training import checkpoint
+
+
+@dataclass
+class FunctionEntry:
+    name: str
+    fn: Callable
+    kind: str = "generic"        # decode | preprocess | inference | postprocess
+    version: int = 1
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+
+class FunctionRegistry:
+    """Fine-grained housekeeping for video-processing functions (Fig 2)."""
+
+    def __init__(self):
+        self._functions: Dict[str, FunctionEntry] = {}
+
+    def register(self, name: str, fn: Callable, *, kind: str = "generic",
+                 **metadata) -> FunctionEntry:
+        version = (self._functions[name].version + 1
+                   if name in self._functions else 1)
+        entry = FunctionEntry(name, fn, kind, version, metadata)
+        self._functions[name] = entry
+        return entry
+
+    def get(self, name: str) -> Callable:
+        return self._functions[name].fn
+
+    def entry(self, name: str) -> FunctionEntry:
+        return self._functions[name]
+
+    def list(self, kind: Optional[str] = None) -> List[str]:
+        return sorted(n for n, e in self._functions.items()
+                      if kind is None or e.kind == kind)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._functions
+
+
+@dataclass
+class ModelRecord:
+    name: str
+    params: Any
+    config: Any
+    profile: Dict[str, float] = field(default_factory=dict)
+    registered_at: float = field(default_factory=time.time)
+    version: int = 1
+
+
+class ModelZoo:
+    """Model registry with optional on-disk persistence + profiler results."""
+
+    def __init__(self, root: Optional[str] = None):
+        self._models: Dict[str, ModelRecord] = {}
+        self._root = root
+
+    def register(self, name: str, params, config=None,
+                 profile: Optional[Dict[str, float]] = None) -> ModelRecord:
+        version = (self._models[name].version + 1
+                   if name in self._models else 1)
+        rec = ModelRecord(name, params, config, profile or {}, version=version)
+        self._models[name] = rec
+        if self._root is not None:
+            checkpoint.save(f"{self._root}/{name}", params,
+                            {"name": name, "version": version})
+        return rec
+
+    def get(self, name: str) -> ModelRecord:
+        return self._models[name]
+
+    def set_profile(self, name: str, device: str, fps: float) -> None:
+        self._models[name].profile[device] = fps
+
+    def list(self) -> List[str]:
+        return sorted(self._models)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._models
+
+
+@dataclass
+class Dispatcher:
+    """Deploys registered functions/models to cloud and fog nodes (§III.D)."""
+    registry: FunctionRegistry
+    zoo: ModelZoo
+    deployments: Dict[str, List[str]] = field(default_factory=dict)
+
+    def dispatch(self, target: str, name: str) -> None:
+        if name not in self.registry and name not in self.zoo:
+            raise KeyError(f"{name!r} is not registered")
+        self.deployments.setdefault(target, [])
+        if name not in self.deployments[target]:
+            self.deployments[target].append(name)
+
+    def deployed(self, target: str) -> List[str]:
+        return list(self.deployments.get(target, []))

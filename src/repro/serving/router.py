@@ -1,0 +1,92 @@
+"""Request router / load balancer (the cloud ML server's load balancer in
+Fig. 3): routes chunks across executor replicas with health checks and
+least-loaded selection; integrates with the autoscaler."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.autoscaler import Autoscaler
+from repro.serving.executor import Executor
+from repro.serving.monitor import Monitor
+
+
+@dataclass
+class Replica:
+    executor: Executor
+    healthy: bool = True
+    inflight: int = 0
+    served: int = 0
+
+
+class Router:
+    """Least-loaded routing with health checks over executor replicas."""
+
+    def __init__(self, replicas: List[Executor],
+                 monitor: Optional[Monitor] = None,
+                 autoscaler: Optional[Autoscaler] = None):
+        self.replicas = [Replica(e) for e in replicas]
+        self.monitor = monitor or Monitor()
+        self.autoscaler = autoscaler
+        self._queue: List[Tuple[str, tuple, dict, float]] = []
+        self.clock = 0.0
+
+    # ------------------------------------------------------------------
+    def mark_unhealthy(self, idx: int) -> None:
+        self.replicas[idx].healthy = False
+        self.monitor.incr("health_check_failures")
+
+    def mark_healthy(self, idx: int) -> None:
+        self.replicas[idx].healthy = True
+
+    def _pick(self) -> Optional[int]:
+        healthy = [(r.inflight + len(r.executor.busy_until), i)
+                   for i, r in enumerate(self.replicas) if r.healthy]
+        if not healthy:
+            return None
+        # least-loaded: fewest inflight, then earliest-free device
+        load = [(r.inflight, min(r.executor.busy_until), i)
+                for i, r in enumerate(self.replicas) if r.healthy]
+        return min(load)[2]
+
+    # ------------------------------------------------------------------
+    def route(self, fn_name: str, *args, now: Optional[float] = None,
+              model_time: Optional[float] = None, **kw):
+        """Dispatch one request; returns (result, completion_time, replica)."""
+        now = self.clock if now is None else now
+        self.clock = max(self.clock, now)
+        idx = self._pick()
+        if idx is None:
+            raise RuntimeError("no healthy replicas")
+        rep = self.replicas[idx]
+        rep.inflight += 1
+        try:
+            result, done = rep.executor.run(fn_name, *args, now=now,
+                                            model_time=model_time, **kw)
+        finally:
+            rep.inflight -= 1
+        rep.served += 1
+        self.monitor.record("route_latency", done - now, now)
+        self.monitor.incr(f"served_replica_{idx}")
+        if self.autoscaler is not None:
+            # queue pressure = backlog seconds ahead of `now`, in units of
+            # this request's service time
+            backlog = max(0.0, min(rep.executor.busy_until) - now)
+            unit = model_time if model_time else max(done - now, 1e-9)
+            queue = int(backlog / max(unit, 1e-9))
+            target = self.autoscaler.decide(done, queue,
+                                            rep.executor.num_devices)
+            if target != rep.executor.num_devices:
+                rep.executor.scale_to(target)
+        return result, done, idx
+
+    def load_report(self) -> Dict[str, float]:
+        total = sum(r.served for r in self.replicas) or 1
+        shares = [r.served / total for r in self.replicas]
+        # Jain's fairness index: 1.0 = perfectly balanced
+        fairness = (sum(shares) ** 2 /
+                    (len(shares) * sum(s ** 2 for s in shares))
+                    if any(shares) else 1.0)
+        return {"served": total, "fairness": fairness,
+                "healthy": sum(r.healthy for r in self.replicas)}

@@ -1,0 +1,57 @@
+"""Checkpointing: flat .npz save/restore for arbitrary pytrees.
+
+Keys encode the tree path; restore rebuilds against a reference tree (so it
+works for params, optimizer state, and classifier snapshots alike).  This is
+the model-zoo storage backend of the stateful platform (§III.D data store).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree, metadata: Dict[str, Any] | None = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2, default=str)
+
+
+def restore(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (arrays or ShapeDtypeStructs)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    flat_paths = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+        for path_, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    leaves = []
+    for key, ref in zip(flat_paths, leaves_like):
+        arr = jnp.asarray(data[key])
+        if arr.shape != tuple(ref.shape):
+            raise ValueError(f"checkpoint shape mismatch at {key}: "
+                             f"{arr.shape} vs {ref.shape}")
+        leaves.append(arr.astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_metadata(path: str) -> Dict[str, Any]:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

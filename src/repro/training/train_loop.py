@@ -1,0 +1,149 @@
+"""Train-step factories: LLM (pjit, sharded) and video models (single host).
+
+``make_train_step`` returns a pure (params, opt_state, batch) -> ... function
+ready for jax.jit with in/out shardings (the launcher supplies those).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.vpaas_video import ClassifierConfig, DetectorConfig
+from repro.models import classifier as clf_mod
+from repro.models import detector as det_mod
+from repro.models import transformer as tfm
+from repro.training.optimizer import AdamW, global_norm
+
+
+# ---------------------------------------------------------------------------
+# LLM training
+# ---------------------------------------------------------------------------
+def make_train_step(
+    cfg: ModelConfig,
+    opt: AdamW,
+    *,
+    impl: str = "ref",
+    remat: bool = True,
+    act_constraint=None,
+    dtype=jnp.float32,
+) -> Callable:
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return tfm.loss_fn(cfg, p, batch, impl=impl, remat=remat,
+                               act_constraint=act_constraint, dtype=dtype)
+
+        (total, parts), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        new_params, new_opt_state = opt.update(grads, opt_state, params)
+        metrics = {"loss": total, "ce": parts["ce"], "aux": parts["aux"],
+                   "grad_norm": global_norm(grads)}
+        return new_params, new_opt_state, metrics
+
+    return train_step
+
+
+def train_llm(cfg: ModelConfig, *, steps: int, batch_size: int, seq_len: int,
+              lr: float = 3e-4, seed: int = 0, log_every: int = 10,
+              branching: int = 8, callback=None) -> Tuple[Any, list]:
+    """Single-host training driver (examples + integration tests)."""
+    from repro.training.data import TokenStream
+
+    key = jax.random.PRNGKey(seed)
+    params = tfm.init_params(cfg, key)
+    opt = AdamW(lr=lr)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, remat=False))
+
+    history = []
+    stream = iter(TokenStream(cfg.vocab_size, seq_len, batch_size, seed,
+                              branching=branching))
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            rec = {"step": step, **{k: float(v) for k, v in metrics.items()}}
+            history.append(rec)
+            if callback:
+                callback(rec)
+    return params, history
+
+
+# ---------------------------------------------------------------------------
+# Video-model training (detector / classifier pre-training)
+# ---------------------------------------------------------------------------
+def train_detector(det_cfg: DetectorConfig, *, steps: int = 300,
+                   batch_size: int = 16, lr: float = 1e-3, seed: int = 0,
+                   content: str = "all", degrade: bool = True,
+                   callback=None):
+    """``degrade=True`` trains on a mix of clean and codec-degraded frames —
+    the cloud detector must keep its localization power on low-quality
+    video (protocol Key Observation 2)."""
+    import numpy as np
+
+    from repro.training.data import detector_batches
+    from repro.video import codec
+
+    rng = np.random.default_rng(seed + 7)
+    params = det_mod.init_detector(det_cfg, jax.random.PRNGKey(seed))
+    opt = AdamW(lr=lr, weight_decay=1e-4)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        def loss(p):
+            return det_mod.detector_loss(det_cfg, p, batch["images"],
+                                         batch["gt_boxes"],
+                                         batch["gt_labels"])
+        (total, parts), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": total, **parts}
+
+    history = []
+    gen = detector_batches(det_cfg, batch_size, seed, content)
+    qualities = [(1.0, 10), (0.8, 30), (0.8, 36), (0.6, 36), (1.0, 26)]
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(gen).items()}
+        if degrade and step % 2 == 1:   # alternate clean / degraded batches
+            r, q = qualities[int(rng.integers(len(qualities)))]
+            batch["images"] = codec.encode(batch["images"], r, q).frames
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % 25 == 0 or step == steps - 1:
+            rec = {"step": step, **{k: float(v) for k, v in m.items()}}
+            history.append(rec)
+            if callback:
+                callback(rec)
+    return params, history
+
+
+def train_classifier(clf_cfg: ClassifierConfig, *, steps: int = 300,
+                     batch_size: int = 64, lr: float = 1e-3, seed: int = 0,
+                     drift: float = 0.0, callback=None):
+    from repro.training.data import classifier_batches
+
+    params = clf_mod.init_classifier(clf_cfg, jax.random.PRNGKey(seed))
+    opt = AdamW(lr=lr, weight_decay=1e-4)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        def loss(p):
+            return clf_mod.classifier_loss(clf_cfg, p, batch["crops"],
+                                           batch["labels"])
+        (total, parts), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": total, **parts}
+
+    history = []
+    gen = classifier_batches(clf_cfg, batch_size, seed, drift=drift)
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(gen).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % 25 == 0 or step == steps - 1:
+            rec = {"step": step, **{k: float(v) for k, v in m.items()}}
+            history.append(rec)
+            if callback:
+                callback(rec)
+    return params, history

@@ -1,0 +1,1 @@
+from repro.video import codec, metrics, synthetic  # noqa: F401

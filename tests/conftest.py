@@ -1,0 +1,11 @@
+import os
+import sys
+
+# tests must see the single real CPU device (the 512-device override is
+# strictly dryrun.py's); keep any user XLA_FLAGS out of the test env
+os.environ.pop("XLA_FLAGS", None)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

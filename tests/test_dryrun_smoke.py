@@ -1,0 +1,45 @@
+"""Dry-run machinery smoke test in a subprocess (the 512-device XLA flag
+must be set before jax initializes, so it cannot run in-process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen2-7b", "decode_32k"),
+    ("mamba2-2.7b", "train_4k"),
+])
+def test_dryrun_lowers_and_compiles(arch, shape, tmp_path):
+    code = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = "
+        "'--xla_force_host_platform_device_count=512'\n"
+        "from repro.launch.dryrun import run_one\n"
+        f"r = run_one({arch!r}, {shape!r}, verbose=False, save=False)\n"
+        "import json; print(json.dumps({k: r[k] for k in "
+        "['ok', 'hlo_flops', 'coll_bytes', 'dominant', 'chips']}))\n"
+    )
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(ROOT, "src"),
+               REPRO_DRYRUN_DIR=str(tmp_path))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"] and rec["chips"] == 256
+    assert rec["hlo_flops"] > 0
+    assert rec["dominant"] in ("compute", "memory", "collective")
+
+
+def test_mesh_shapes():
+    # make_production_mesh is function-level: importing must not init devices
+    import repro.launch.mesh as mesh_mod
+    src = open(mesh_mod.__file__).read()
+    assert "def make_production_mesh" in src
+    assert not any(line.strip().startswith("MESH") for line in
+                   src.splitlines())

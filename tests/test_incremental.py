@@ -1,0 +1,101 @@
+"""§V incremental learning: Eq. 8 / Eq. 4 updates, Eq. 9 ensemble, learner
+state machine (budget, trigger, snapshots)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import incremental as inc
+
+KEY = jax.random.PRNGKey(3)
+D, C = 16, 4
+
+
+def _data(n, key=KEY):
+    ks = jax.random.split(key, 2)
+    centers = jax.random.normal(ks[0], (C, D)) * 2.0
+    labels = jax.random.randint(ks[1], (n,), 0, C)
+    xs = centers[labels] + jax.random.normal(ks[0], (n, D)) * 0.3
+    xs = jnp.concatenate([xs, jnp.ones((n, 1))], axis=-1)  # bias feature
+    ys = jax.nn.one_hot(labels, C)
+    return xs, ys, labels
+
+
+def test_eq8_no_update_on_negative_preactivation():
+    W = -jnp.ones((D + 1, C))          # all preactivations negative
+    x = jnp.ones((D + 1,))
+    y = jax.nn.one_hot(0, C)
+    W2 = inc.update_eq8(W, x, y)
+    np.testing.assert_array_equal(np.asarray(W2), np.asarray(W))
+
+
+def test_eq8_updates_only_active_columns():
+    W = jnp.zeros((D + 1, C)).at[:, 0].set(0.5).at[:, 1].set(-0.5)
+    x = jnp.ones((D + 1,)) / (D + 1)
+    y = jax.nn.one_hot(0, C)
+    W2 = inc.update_eq8(W, x, y, eta=0.1)
+    assert not jnp.allclose(W2[:, 0], W[:, 0])      # positive preact: moves
+    np.testing.assert_array_equal(np.asarray(W2[:, 1]), np.asarray(W[:, 1]))
+
+
+def test_proximal_updates_improve_accuracy():
+    xs, ys, labels = _data(256)
+    W = jax.random.normal(KEY, (D + 1, C)) * 0.01
+
+    def acc(w):
+        return float(jnp.mean(jnp.argmax(xs @ w, -1) == labels))
+
+    before = acc(W)
+    W2 = inc.batch_update(W, xs, ys, rule="proximal", eta=0.5)
+    after = acc(W2)
+    assert after > before + 0.2, (before, after)
+
+
+def test_ensemble_weights_favor_better_snapshot():
+    xs, ys, labels = _data(256)
+    W_good = inc.batch_update(jnp.zeros((D + 1, C)), xs, ys,
+                              rule="proximal", eta=0.5)
+    W_bad = jax.random.normal(KEY, (D + 1, C)) * 0.5
+    snaps = jnp.stack([W_bad, W_good])
+    omega = inc.ensemble_weights(snaps, xs, ys, v=1e-2)
+    assert omega.shape == (2,)
+    assert omega[1] > omega[0], "ensemble should weight the better snapshot"
+    preds = inc.ensemble_predict(snaps, omega, xs)
+    assert float(jnp.mean(jnp.argmax(preds, -1) == labels)) > 0.5
+
+
+def test_learner_budget_and_trigger():
+    learner = inc.IncrementalLearner(num_classes=C, trigger=8, budget=20,
+                                     rule="proximal", eta=0.5)
+    xs, ys, labels = _data(64)
+    W = jnp.zeros((D + 1, C))
+    updates = 0
+    for i in range(64):
+        accepted = learner.collect(np.asarray(xs[i]), int(labels[i]))
+        if i < 20:
+            assert accepted
+        else:
+            assert not accepted          # budget exhausted
+        W, did = learner.maybe_update(W)
+        updates += did
+    assert learner.labels_used == 20
+    assert updates >= 2
+    assert len(learner.snapshots) == updates
+
+    omega = learner.fit_ensemble()
+    assert omega is not None and len(omega) == len(learner.snapshots)
+    preds = learner.predict(xs)
+    assert preds.shape == (64, C)
+
+
+def test_eq8_faithful_form_matches_paper():
+    """Eq. 8 closed form: delta = -eta * y / sigma(Wx) * x on active cols."""
+    W = jnp.ones((D + 1, C)) * 0.2
+    x = jnp.ones((D + 1,)) * 0.1
+    y = jax.nn.one_hot(2, C).astype(jnp.float32)
+    eta = 0.05
+    pre = x @ W
+    expected_delta = -eta * jnp.outer(x, y / jnp.maximum(pre, 1e-2))
+    W2 = inc.update_eq8(W, x, y, eta=eta)
+    np.testing.assert_allclose(np.asarray(W2 - W), np.asarray(expected_delta),
+                               atol=1e-6)

@@ -1,0 +1,208 @@
+"""Pallas kernel validation: shape/dtype sweeps, interpret mode vs the
+pure-jnp oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels import iou_filter as ik
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 3e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,sq,skv,nq,nkv,d", [
+    (2, 128, 128, 4, 2, 64),
+    (1, 192, 192, 8, 8, 128),
+    (2, 64, 256, 4, 1, 64),
+    (1, 96, 96, 6, 3, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, sq, skv, nq, nkv, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, nq, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, nkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, nkv, d), dtype)
+    want = ref.flash_attention(q, k, v, causal=True)
+    got = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("window,softcap,q_offset,causal", [
+    (64, None, 0, True),
+    (None, 30.0, 0, True),
+    (None, None, 128, True),
+    (None, None, 0, False),
+])
+def test_flash_attention_variants(window, softcap, q_offset, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k = jax.random.normal(ks[1], (2, 256, 2, 64))
+    v = jax.random.normal(ks[2], (2, 256, 2, 64))
+    want = ref.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, q_offset=q_offset)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, q_offset=q_offset,
+                          bq=64, bk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+def test_flash_chunked_matches_plain():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 300, 4, 32))
+    k = jax.random.normal(ks[1], (1, 300, 4, 32))
+    v = jax.random.normal(ks[2], (1, 300, 4, 32))
+    want = ref.flash_attention(q, k, v, causal=True)
+    got = ref.flash_attention_chunked(q, k, v, causal=True, chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,S,nq,nkv,d,clen", [
+    (2, 256, 8, 2, 64, 100),
+    (1, 512, 4, 4, 128, 512),
+    (3, 300, 6, 3, 32, None),   # per-row lengths
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, S, nq, nkv, d, clen, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, nq, d), dtype)
+    kc = jax.random.normal(ks[1], (b, S, nkv, d), dtype)
+    vc = jax.random.normal(ks[2], (b, S, nkv, d), dtype)
+    cl = (jnp.asarray([10, S // 2, S])[:b] if clen is None
+          else jnp.asarray(clen, jnp.int32))
+    want = ref.decode_attention(q, kc, vc, cl)
+    got = decode_attention(q, kc, vc, cl, bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_decode_attention_window():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 8, 64))
+    kc = jax.random.normal(ks[1], (2, 1024, 1, 64))
+    vc = jax.random.normal(ks[2], (2, 1024, 1, 64))
+    cl = jnp.asarray(700, jnp.int32)
+    want = ref.decode_attention(q, kc, vc, cl, window=256)
+    got = decode_attention(q, kc, vc, cl, window=256, bk=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+def _naive_ssd(x, dt, A, B, C, init=None):
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    st = np.zeros((b, h, p, n)) if init is None else np.array(init)
+    ys = []
+    for t in range(s):
+        dA = np.exp(np.asarray(dt[:, t]) * np.asarray(A))
+        st = (st * dA[..., None, None]
+              + np.einsum("bhp,bn->bhpn",
+                          np.asarray(x[:, t]) * np.asarray(dt[:, t])[..., None],
+                          np.asarray(B[:, t])))
+        ys.append(np.einsum("bhpn,bn->bhp", st, np.asarray(C[:, t])))
+    return np.stack(ys, 1), st
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 64, 3, 8, 16, 16),
+    (1, 100, 2, 16, 8, 32),   # non-multiple seq
+    (2, 37, 4, 4, 4, 16),
+])
+def test_ssd_scan_vs_naive_and_kernel(b, s, h, p, n, chunk):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    init = jax.random.normal(ks[5], (b, h, p, n)) * 0.1
+
+    y_naive, st_naive = _naive_ssd(x, dt, A, B, C, init)
+    y_ref, st_ref = ref.ssd_scan(x, dt, A, B, C, chunk=chunk,
+                                 initial_state=init)
+    y_k, st_k = ssd_scan(x, dt, A, B, C, chunk=chunk, initial_state=init,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ref), y_naive, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_ref), st_naive, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_ref),
+                               atol=1e-4)
+
+
+def test_ssd_step_consistent_with_scan():
+    b, s, h, p, n = 1, 8, 2, 4, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    y_scan, final = ref.ssd_scan(x, dt, A, B, C, chunk=4)
+    st = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        y, st = ref.ssd_step(x[:, t], dt[:, t], A, B[:, t], C[:, t], st)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_scan), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(final), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# IoU / region filter
+# ---------------------------------------------------------------------------
+def _rand_boxes(key, n):
+    pts = jax.random.uniform(key, (n, 2, 2))
+    lo = jnp.min(pts, axis=1)
+    hi = jnp.max(pts, axis=1)
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+@pytest.mark.parametrize("n,m", [(64, 32), (200, 100), (13, 7), (256, 256)])
+def test_iou_kernel_sweep(n, m):
+    ka, kb = jax.random.split(KEY)
+    a, b = _rand_boxes(ka, n), _rand_boxes(kb, m)
+    want = ref.iou_matrix(a, b)
+    got = ik.iou_matrix(a, b, bn=64, bm=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("n,m", [(64, 32), (130, 70)])
+def test_region_filter_kernel(n, m):
+    ka, kb = jax.random.split(KEY)
+    a, b = _rand_boxes(ka, n), _rand_boxes(kb, m)
+    pv = jax.random.uniform(ka, (n,)) > 0.2
+    av = jax.random.uniform(kb, (m,)) > 0.2
+    loc = jax.random.uniform(kb, (n,))
+    kw = dict(theta_loc=0.4, theta_iou=0.3, theta_back=0.5)
+    want = ref.region_filter_mask(a, pv, b, av, loc, **kw)
+    got = ik.region_filter_mask(a, pv, b, av, loc, bn=64, bm=64,
+                                interpret=True, **kw)
+    assert bool(jnp.all(want == got))
+
+
+def test_nms_removes_duplicates():
+    boxes = jnp.asarray([[0.1, 0.1, 0.4, 0.4],
+                         [0.11, 0.11, 0.41, 0.41],   # duplicate of 0
+                         [0.6, 0.6, 0.9, 0.9]])
+    scores = jnp.asarray([0.9, 0.8, 0.7])
+    keep = ref.nms_mask(boxes, scores, jnp.ones(3, bool), 0.5)
+    assert keep.tolist() == [True, False, True]

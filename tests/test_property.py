@@ -1,0 +1,122 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import incremental as inc
+from repro.kernels import ref
+from repro.serving.autoscaler import Autoscaler
+from repro.serving.batching import DynamicBatcher
+from repro.video import codec
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _boxes_strategy(n):
+    return st.lists(
+        st.tuples(st.floats(0, 0.9), st.floats(0, 0.9),
+                  st.floats(0.05, 1.0), st.floats(0.05, 1.0)),
+        min_size=n, max_size=n).map(
+        lambda bs: np.asarray(
+            [[x, y, min(x + w, 1.0), min(y + h, 1.0)]
+             for x, y, w, h in bs], np.float32))
+
+
+@settings(**SETTINGS)
+@given(_boxes_strategy(8))
+def test_iou_identity_and_range(boxes):
+    iou = np.asarray(ref.iou_matrix(jnp.asarray(boxes), jnp.asarray(boxes)))
+    assert (iou >= -1e-6).all() and (iou <= 1.0 + 1e-6).all()
+    areas = (boxes[:, 2] - boxes[:, 0]) * (boxes[:, 3] - boxes[:, 1])
+    diag = np.diag(iou)
+    assert np.allclose(diag[areas > 1e-6], 1.0, atol=1e-5)
+    assert np.allclose(iou, iou.T, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(_boxes_strategy(10), st.floats(0.1, 0.9), st.floats(0.1, 0.9),
+       st.floats(0.1, 1.0))
+def test_region_filter_subset_of_valid(boxes, theta_loc, theta_iou,
+                                       theta_back):
+    n = len(boxes)
+    loc = np.linspace(0.0, 1.0, n).astype(np.float32)
+    pv = np.ones(n, bool)
+    av = loc > 0.8
+    keep = np.asarray(ref.region_filter_mask(
+        jnp.asarray(boxes), jnp.asarray(pv), jnp.asarray(boxes),
+        jnp.asarray(av), jnp.asarray(loc),
+        theta_loc=theta_loc, theta_iou=theta_iou, theta_back=theta_back))
+    # filter is a pure restriction: nothing invalid or below-threshold kept
+    assert not (keep & ~pv).any()
+    assert not (keep & (loc < theta_loc)).any()
+    # kept regions never overlap an accepted region above theta_iou
+    if av.any() and keep.any():
+        iou = np.asarray(ref.iou_matrix(jnp.asarray(boxes[keep]),
+                                        jnp.asarray(boxes[av])))
+        assert (iou.max(axis=1) < theta_iou + 1e-6).all()
+
+
+@settings(**SETTINGS)
+@given(st.integers(6, 48))
+def test_codec_bytes_monotone_in_qp(q):
+    rng = np.random.default_rng(0)
+    frames = jnp.asarray(rng.random((1, 32, 32, 3)), jnp.float32)
+    b1 = float(codec.encode(frames, 1.0, q).nbytes)
+    b2 = float(codec.encode(frames, 1.0, q + 3).nbytes)
+    assert b2 <= b1 + 1e-6
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 3), st.floats(0.01, 2.0))
+def test_eq8_touches_only_positive_columns(label, eta):
+    rng = np.random.default_rng(label)
+    W = jnp.asarray(rng.normal(size=(9, 4)).astype(np.float32))
+    x = jnp.asarray(np.append(rng.normal(size=8), 1.0).astype(np.float32))
+    y = jax.nn.one_hot(label, 4)
+    W2 = inc.update_eq8(W, x, y, eta=eta)
+    pre = np.asarray(x @ W)
+    changed = ~np.isclose(np.asarray(W2), np.asarray(W)).all(axis=0)
+    assert not changed[pre <= 0].any(), "negative preactivation must freeze"
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=30),
+       st.integers(1, 8))
+def test_batcher_conserves_requests(arrivals, max_batch):
+    b = DynamicBatcher(max_batch=max_batch, max_delay=0.01)
+    arrivals = sorted(arrivals)
+    total_in, total_out = 0, 0
+    for t in arrivals:
+        b.submit(None, now=t)
+        total_in += 1
+        while b.ready(now=t):
+            total_out += len(b.take_batch(now=t))
+    while len(b):
+        total_out += len(b.take_batch(now=arrivals[-1] + 1))
+    assert total_in == total_out
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.integers(0, 40), min_size=5, max_size=40))
+def test_autoscaler_respects_bounds(queue_trace):
+    a = Autoscaler(min_devices=1, max_devices=6, cooldown_s=0.0)
+    devices = 1
+    for t, q in enumerate(queue_trace):
+        devices = a.decide(float(t), q, devices)
+        assert 1 <= devices <= 6
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 64), st.integers(1, 4), st.integers(2, 8))
+def test_moe_positions_are_unique_slots(n, k, e):
+    from repro.models.moe import _positions_in_expert
+    rng = np.random.default_rng(n * k * e)
+    ids = jnp.asarray(rng.integers(0, e, n * k), jnp.int32)
+    pos = np.asarray(_positions_in_expert(ids, e))
+    slots = np.asarray(ids) * (n * k) + pos          # unbounded capacity
+    assert len(np.unique(slots)) == n * k, "slot collision"
+    # positions within each expert are 0..count-1
+    for ex in range(e):
+        p = np.sort(pos[np.asarray(ids) == ex])
+        assert (p == np.arange(len(p))).all()

@@ -1,0 +1,138 @@
+"""Serverless substrate: registry, batching, autoscaler, executor, fault
+tolerance, LLM server, cascade."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.bandwidth import CLOUD, FOG, NetworkModel
+from repro.core.cascade import BigLittleCascade, CascadeConfig
+from repro.models import transformer as T
+from repro.serving.autoscaler import Autoscaler
+from repro.serving.batching import DynamicBatcher, batch_crops
+from repro.serving.executor import Executor
+from repro.serving.fault import FaultTolerantCoordinator
+from repro.serving.registry import Dispatcher, FunctionRegistry, ModelZoo
+from repro.serving.server import LLMServer, Request
+
+
+def test_registry_versioning_and_kinds():
+    reg = FunctionRegistry()
+    reg.register("decode", lambda x: x, kind="decode")
+    reg.register("decode", lambda x: x + 1, kind="decode")
+    assert reg.entry("decode").version == 2
+    assert reg.list(kind="decode") == ["decode"]
+    assert "decode" in reg
+
+
+def test_model_zoo_and_dispatcher(tmp_path):
+    zoo = ModelZoo(root=str(tmp_path))
+    zoo.register("clf", {"w": np.ones(3)})
+    zoo.set_profile("clf", "fog-xavier", 450.0)
+    assert zoo.get("clf").profile["fog-xavier"] == 450.0
+    reg = FunctionRegistry()
+    disp = Dispatcher(reg, zoo)
+    disp.dispatch("fog-0", "clf")
+    assert disp.deployed("fog-0") == ["clf"]
+    with pytest.raises(KeyError):
+        disp.dispatch("fog-0", "missing")
+
+
+def test_dynamic_batcher_flush_rules():
+    b = DynamicBatcher(max_batch=4, max_delay=0.05)
+    for i in range(3):
+        b.submit(i, now=0.0)
+    assert not b.ready(now=0.01)          # not full, not timed out
+    assert b.ready(now=0.06)              # timeout
+    batch = b.take_batch(now=0.06)
+    assert len(batch) == 3
+    for i in range(5):
+        b.submit(i, now=1.0)
+    assert b.ready(now=1.0)               # full
+    assert len(b.take_batch(now=1.0)) == 4
+
+
+def test_batch_crops_padding():
+    crops = np.random.rand(2, 8, 4, 4, 3).astype(np.float32)
+    valid = np.zeros((2, 8), bool)
+    valid[0, 2] = valid[1, 5] = valid[1, 6] = True
+    batch, idx, size = batch_crops(crops, valid)
+    assert size == 4 and batch.shape[0] == 4
+    assert len(idx) == 3
+    np.testing.assert_array_equal(batch[0], crops[0, 2])
+
+
+def test_autoscaler_scales_with_queue():
+    a = Autoscaler(min_devices=1, max_devices=8, cooldown_s=0.0)
+    n = a.decide(0.0, queue_len=20, devices=1)
+    assert n > 1
+    n2 = a.decide(10.0, queue_len=0, devices=n)
+    assert n2 == n - 1
+
+
+def test_executor_device_pool_timing():
+    reg = FunctionRegistry()
+    reg.register("detect", lambda x: x)
+    ex = Executor("cloud", reg, CLOUD, num_devices=2)
+    _, t1 = ex.run("detect", 1, now=0.0, model_time=1.0)
+    _, t2 = ex.run("detect", 2, now=0.0, model_time=1.0)
+    _, t3 = ex.run("detect", 3, now=0.0, model_time=1.0)
+    assert t1 == t2 == 1.0                # two devices in parallel
+    assert t3 == 2.0                      # queued behind one of them
+    ex.scale_to(4)
+    assert ex.num_devices == 4
+
+
+def test_fault_tolerance_failover_and_recovery():
+    net = NetworkModel()
+    coord = FaultTolerantCoordinator(net, failure_threshold=2)
+    assert coord.heartbeat(0.0) == "cloud"
+    net.up = False
+    assert coord.heartbeat(1.0) == "cloud"        # first miss tolerated
+    assert coord.heartbeat(2.0) == "fog-fallback"
+    net.up = True
+    assert coord.heartbeat(3.0) == "cloud"
+    events = [e["event"] for e in coord.events]
+    assert events == ["failover", "recovered"]
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("qwen2-7b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_llm_server_continuous_batching(tiny_model):
+    cfg, params = tiny_model
+    srv = LLMServer(cfg, params, num_slots=2, max_seq=64, eos_token=-1)
+    rng = np.random.default_rng(0)
+    for i in range(4):                   # more requests than slots
+        srv.submit(Request(i, rng.integers(0, cfg.vocab_size, 5),
+                           max_new_tokens=4))
+    done = srv.run_until_drained(max_steps=200)
+    assert len(done) == 4
+    for req in done:
+        assert len(req.output) == 4
+        assert all(0 <= t < cfg.padded_vocab for t in req.output)
+    assert srv.monitor.counters["requests_finished"] == 4
+
+
+def test_cascade_escalation_and_adapter(tiny_model):
+    cfg, params = tiny_model
+    big_params = T.init_params(cfg, jax.random.PRNGKey(9))
+    cas = BigLittleCascade(cfg, params, cfg, big_params,
+                           CascadeConfig(escalate_below=1.1))  # always
+    toks = np.random.default_rng(0).integers(0, cfg.vocab_size, (3, 8))
+    pred, info = cas.answer(toks)
+    assert pred.shape == (3,)
+    assert info["escalated"].all()
+    assert cas.stats.escalated == 3
+    assert cas.stats.adapter_updates == 3
+    assert float(np.abs(np.asarray(cas.logit_bias)).sum()) > 0
+
+    cas2 = BigLittleCascade(cfg, params, cfg, big_params,
+                            CascadeConfig(escalate_below=0.0))  # never
+    pred2, info2 = cas2.answer(toks)
+    assert not info2["escalated"].any()
+    assert cas2.stats.escalation_rate == 0.0

@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: reduced variants (2-layer-scale, d_model
+<= 512, <= 4 experts) run one forward + one train step on CPU, asserting
+output shapes and the absence of NaNs; decode must match full forward."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import stubs
+from repro.models import transformer as T
+from repro.training.optimizer import AdamW
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def _inputs(cfg, b, s, key):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    ctx = (stubs.frontend_embeddings(cfg, b, key)
+           if cfg.num_ctx_tokens else None)
+    return toks, ctx
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_config_constraints(name):
+    cfg = get_config(name).reduced()
+    assert cfg.d_model <= 512
+    assert cfg.vocab_size <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    full = get_config(name)
+    assert cfg.family == full.family
+    assert cfg.block_pattern == full.block_pattern
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_no_nans(name, key):
+    cfg = get_config(name).reduced()
+    params = T.init_params(cfg, key)
+    b, s = 2, 24
+    toks, ctx = _inputs(cfg, b, s, key)
+    logits, cache, aux = T.forward(cfg, params, toks, ctx_embed=ctx)
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert logits.dtype == jnp.float32
+    assert not jnp.isnan(logits).any()
+    assert not jnp.isnan(aux)
+    assert cache is None
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_one_train_step(name, key):
+    cfg = get_config(name).reduced()
+    params = T.init_params(cfg, key)
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    b, s = 2, 16
+    toks, ctx = _inputs(cfg, b, s, key)
+    batch = {"tokens": toks, "labels": toks}
+    if ctx is not None:
+        batch["ctx_embed"] = ctx
+
+    def loss(p):
+        return T.loss_fn(cfg, p, batch, remat=False)
+
+    (total, parts), grads = jax.value_and_grad(loss, has_aux=True)(params)
+    assert jnp.isfinite(total)
+    new_params, _ = opt.update(grads, opt_state, params)
+    moved = jax.tree.reduce(
+        lambda acc, pair: acc, jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))), params, new_params))
+    deltas = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, new_params))
+    assert max(deltas) > 0.0, "optimizer did not move any parameter"
+    assert all(jnp.isfinite(jnp.asarray(d)) for d in deltas)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_matches_forward(name, key):
+    cfg = get_config(name).reduced()
+    params = T.init_params(cfg, key)
+    b, s = 2, 13
+    toks, ctx = _inputs(cfg, s=s + 1, b=b, key=key)
+    full, _, _ = T.forward(cfg, params, toks, ctx_embed=ctx)
+    cache = T.init_cache(cfg, b, 32)
+    _, cache = T.prefill(cfg, params, toks[:, :s], cache, ctx_embed=ctx)
+    lg, _ = T.decode_step(cfg, params, toks[:, s:s + 1], cache,
+                          jnp.asarray(s, jnp.int32), ctx_embed=ctx)
+    err = float(jnp.max(jnp.abs(full[:, s] - lg[:, 0])))
+    assert err < 5e-3, f"{name}: decode diverges from forward by {err}"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_per_slot_cache_index(name, key):
+    """Continuous batching: per-slot cache indices match uniform decode."""
+    cfg = get_config(name).reduced()
+    params = T.init_params(cfg, key)
+    b, s = 2, 9
+    toks, ctx = _inputs(cfg, s=s + 1, b=b, key=key)
+    cache = T.init_cache(cfg, b, 32)
+    _, cache = T.prefill(cfg, params, toks[:, :s], cache, ctx_embed=ctx)
+    lg_scalar, _ = T.decode_step(cfg, params, toks[:, s:s + 1], cache,
+                                 jnp.asarray(s, jnp.int32), ctx_embed=ctx)
+    lg_vec, _ = T.decode_step(cfg, params, toks[:, s:s + 1], cache,
+                              jnp.full((b,), s, jnp.int32), ctx_embed=ctx)
+    assert float(jnp.max(jnp.abs(lg_scalar - lg_vec))) < 1e-4

@@ -1,0 +1,99 @@
+"""End-to-end system behaviour: coordinator + HITL + fault tolerance,
+reproducing the paper's §V/§VI dynamics at test scale."""
+import numpy as np
+import pytest
+
+from repro.configs.vpaas_video import (CLASSIFIER, DETECTOR,
+                                       FALLBACK_DETECTOR)
+from repro.core.coordinator import CloudFogCoordinator
+from repro.core.incremental import IncrementalLearner
+from repro.core.protocol import HighLowProtocol
+from repro.serving.policies import default_policies
+from repro.training.train_loop import train_classifier, train_detector
+from repro.video import synthetic
+
+
+@pytest.fixture(scope="module")
+def models():
+    det_params, _ = train_detector(DETECTOR, steps=200, batch_size=16,
+                                   seed=5)
+    clf_params, _ = train_classifier(CLASSIFIER, steps=200, batch_size=64,
+                                     seed=5)
+    fb_params, _ = train_detector(FALLBACK_DETECTOR, steps=80, batch_size=8,
+                                  seed=5, degrade=False)
+    return det_params, clf_params, fb_params
+
+
+def _drift_chunks(n, drift, seed=77):
+    rng = np.random.default_rng(seed)
+    return [synthetic.drifted_chunk(rng, "traffic", drift=drift,
+                                    num_frames=4) for _ in range(n)]
+
+
+def test_coordinator_runs_and_accounts(models):
+    det_params, clf_params, fb_params = models
+    proto = HighLowProtocol(DETECTOR, CLASSIFIER)
+    coord = CloudFogCoordinator(proto, det_params, clf_params,
+                                fallback_params=fb_params)
+    out = coord.run(_drift_chunks(2, 0.0), learn=False)
+    assert out.bandwidth > 0
+    assert out.cloud_cost == 8            # 2 chunks x 4 frames, one round
+    assert len(out.latencies) == 2
+    assert all(m == "cloud" for m in out.modes)
+
+
+def test_hitl_improves_under_drift(models):
+    """§V: with drifted data the static fog classifier degrades; HITL
+    incremental updates recover accuracy (Fig. 13a dynamic)."""
+    det_params, clf_params, fb_params = models
+    drift = 1.0
+
+    def run(learn):
+        proto = HighLowProtocol(DETECTOR, CLASSIFIER)
+        learner = IncrementalLearner(num_classes=CLASSIFIER.num_classes,
+                                     trigger=16, budget=400,
+                                     rule="proximal")
+        coord = CloudFogCoordinator(proto, det_params, clf_params,
+                                    fallback_params=fb_params,
+                                    learner=learner)
+        warm = _drift_chunks(6, drift, seed=31)
+        test = _drift_chunks(3, drift, seed=97)
+        if learn:
+            coord.run(warm, learn=True)
+        return coord.run(test, learn=False)
+
+    static = run(learn=False)
+    adapted = run(learn=True)
+    assert adapted.f1["f1"] >= static.f1["f1"], (
+        f"HITL must not hurt: {adapted.f1['f1']:.3f} vs "
+        f"{static.f1['f1']:.3f}")
+
+
+def test_fault_tolerance_failover(models):
+    det_params, clf_params, fb_params = models
+    proto = HighLowProtocol(DETECTOR, CLASSIFIER)
+    coord = CloudFogCoordinator(proto, det_params, clf_params,
+                                fallback_params=fb_params)
+    chunks = _drift_chunks(6, 0.0)
+    # cloud dies after 2 chunks, recovers after 4
+    modes = []
+    for i, chunk in enumerate(chunks):
+        coord.network.up = not (2 <= i < 4)
+        coord.process_chunk(chunk, learn=False)
+        modes.append(coord.fault.mode)
+    assert modes[0] == "cloud"
+    assert "fog-fallback" in modes        # outage served by fog detector
+    assert modes[-1] == "cloud"           # recovered
+    events = [e["event"] for e in coord.fault.events]
+    assert events.count("failover") == 1
+    assert events.count("recovered") == 1
+
+
+def test_policy_manager_builds_all_policies(models):
+    det_params, _, _ = models
+    pm = default_policies()
+    assert set(pm.list()) == {"vpaas-highlow", "mpeg", "glimpse", "cloudseg",
+                              "dds"}
+    for name in pm.list():
+        driver = pm.build(name, DETECTOR, CLASSIFIER)
+        assert hasattr(driver, "process_chunk")
