@@ -24,6 +24,7 @@ BENCHES = [
     ("fig13_hitl", "benchmarks.bench_hitl"),
     ("fig15_fault_tolerance", "benchmarks.bench_fault_tolerance"),
     ("fig16_autoscale", "benchmarks.bench_autoscale"),
+    ("multistream", "benchmarks.bench_multistream"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline_table"),
 ]

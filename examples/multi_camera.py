@@ -1,0 +1,81 @@
+"""Multi-camera serving driver: N concurrent streams through the serverless
+function graph.
+
+Each camera gets its own fog node, model cache W, and §V incremental
+learner; the shared cloud detector serves all of them through the
+cross-stream batcher, with the autoscaler growing the GPU pool from real
+queue depths.  Per-stream accuracy matches what each camera would get from
+a dedicated sequential pipeline — concurrency costs nothing but queue_wait.
+
+Run:  PYTHONPATH=src python examples/multi_camera.py [--cameras 4]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from benchmarks.common import load_context
+from repro.configs.vpaas_video import CLASSIFIER, DETECTOR
+from repro.core.coordinator import MultiStreamCoordinator, StreamSpec
+from repro.core.incremental import IncrementalLearner
+from repro.core.protocol import HighLowProtocol
+from repro.serving.autoscaler import Autoscaler
+from repro.video import synthetic
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cameras", type=int, default=4)
+    ap.add_argument("--chunks", type=int, default=3)
+    ap.add_argument("--frames", type=int, default=4)
+    args = ap.parse_args()
+
+    ctx = load_context()
+    contents = list(synthetic.CONTENT_TYPES)
+    specs = []
+    for i in range(args.cameras):
+        rng = np.random.default_rng(90 + i)
+        content = contents[i % len(contents)]
+        chunks = [synthetic.make_chunk(rng, content,
+                                       num_frames=args.frames)
+                  for _ in range(args.chunks)]
+        specs.append(StreamSpec(
+            name=f"{content}-cam{i}", chunks=chunks,
+            learner=IncrementalLearner(num_classes=CLASSIFIER.num_classes,
+                                       trigger=16, budget=256,
+                                       rule="proximal")))
+
+    scaler = Autoscaler(min_devices=1, max_devices=8, cooldown_s=0.5)
+    multi = MultiStreamCoordinator(
+        HighLowProtocol(DETECTOR, CLASSIFIER), ctx.det_params,
+        ctx.clf_params, specs, fallback_params=ctx.fallback_params,
+        max_batch_chunks=args.cameras, batch_window=0.05,
+        autoscaler=scaler)
+    out = multi.run(learn=True)
+
+    print(f"{'stream':>16} {'f1':>6} {'wan_kB':>8} {'cost':>6} "
+          f"{'lat(ms)':>8} {'qwait(ms)':>9} {'labels':>6}")
+    for spec in specs:
+        r = out[spec.name]
+        qw = np.mean([res.latency.queue_wait for _, res, _
+                      in multi.scheduler.streams[spec.name].results])
+        print(f"{spec.name:>16} {r.f1['f1']:6.3f} {r.bandwidth/1e3:8.1f} "
+              f"{r.cloud_cost:6.0f} {np.mean(r.latencies)*1e3:8.0f} "
+              f"{qw*1e3:9.1f} "
+              f"{r.learner_summary.get('labels_used', 0):6d}")
+
+    rep = multi.report()
+    print(f"\ncloud detect: {rep['calls']} batched calls, "
+          f"{rep['frames']} frames (+{rep['padded_frames']} pad), "
+          f"{rep['frames_per_s']:.0f} frames/s wall")
+    print(f"batching: max {rep['batch_max_batch_chunks']} chunks/batch, "
+          f"{rep['batch_batches']} batches for {rep['batch_chunks']} chunks")
+    print("autoscaler:", scaler.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -74,15 +74,20 @@ class LatencyBreakdown:
     transmission: float = 0.0
     cloud_inference: float = 0.0
     fog_inference: float = 0.0
+    # time spent waiting for cross-stream batch formation / a free cloud
+    # device (zero on the sequential single-stream path)
+    queue_wait: float = 0.0
 
     @property
     def total(self) -> float:
         return (self.quality_control + self.transmission
-                + self.cloud_inference + self.fog_inference)
+                + self.cloud_inference + self.fog_inference
+                + self.queue_wait)
 
     def as_dict(self) -> Dict[str, float]:
         return {"quality_control": self.quality_control,
                 "transmission": self.transmission,
                 "cloud_inference": self.cloud_inference,
                 "fog_inference": self.fog_inference,
+                "queue_wait": self.queue_wait,
                 "total": self.total}

@@ -1,27 +1,33 @@
-"""Cloud-fog coordinator: executes the selected policy across tiers, drives
-the HITL loop, and handles failover (§III.C fog server coordinator).
+"""Cloud-fog coordinators: thin drivers over the serverless function graph
+(§III.C fog server coordinator + §III.D dispatcher).
 
-This is the orchestration layer gluing protocol + serving substrate:
-  * policy execution (HighLow / baselines via PolicyManager)
-  * incremental-learning loop (collect -> human label -> Eq. 8 update ->
-    model-cache refresh on fog)
-  * fault tolerance (cloud outage -> fog fallback detector)
+The orchestration itself lives in ``repro.serving.graph``: protocol stages
+are registered functions dispatched through the executor/router substrate,
+scheduled by an event-driven clock, with cross-stream batching of the cloud
+detector.  The coordinators here only wire streams into that graph:
+
+  * :class:`CloudFogCoordinator` — the single-stream driver (bit-identical
+    to the sequential ``HighLowProtocol`` path): policy execution, HITL
+    incremental learning, fault tolerance (cloud outage -> fog fallback).
+  * :class:`MultiStreamCoordinator` — N concurrent camera streams sharing
+    the cloud detector through the cross-stream batcher + autoscaler.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.configs.vpaas_video import (ClassifierConfig, DetectorConfig,
-                                       FALLBACK_DETECTOR)
+from repro.configs.vpaas_video import FALLBACK_DETECTOR
 from repro.core.bandwidth import NetworkModel
-from repro.core.hitl import BACKGROUND, OracleAnnotator
+from repro.core.hitl import OracleAnnotator
 from repro.core.incremental import IncrementalLearner
 from repro.core.protocol import ChunkResult, HighLowProtocol
 from repro.models import detector as det_mod
+from repro.serving.batching import CrossStreamBatcher
 from repro.serving.fault import FaultTolerantCoordinator
+from repro.serving.graph import GraphScheduler, StreamState, VideoFunctionGraph
 from repro.serving.monitor import Monitor
 from repro.video.metrics import F1Accumulator
 
@@ -36,84 +42,92 @@ class CoordinatorResult:
     learner_summary: Dict[str, float]
 
 
+def fog_fallback_result(protocol: HighLowProtocol, fallback_params,
+                        clf_params, frames: np.ndarray,
+                        fallback_cfg=None) -> ChunkResult:
+    """Cloud is down: run the small fog detector locally (Fig. 15).
+
+    The HITL hand-off arrays keep the *real* classifier shapes (feature dim
+    d+1 from the one-vs-all weight matrix, C score columns) so downstream
+    consumers — the learner, result concatenation — never shape-mismatch
+    after an outage."""
+    import jax.numpy as jnp
+
+    from repro.baselines.common import threshold_detections
+    from repro.core.bandwidth import LatencyBreakdown
+
+    det = det_mod.detect(fallback_cfg or FALLBACK_DETECTOR, fallback_params,
+                         jnp.asarray(frames))
+    boxes, labels, valid = threshold_detections(det, 0.5, 0.25)
+    f = frames.shape[0]
+    lat = LatencyBreakdown(fog_inference=protocol.fog.detect_time(f))
+    n = boxes.shape[1]
+    feat_dim, num_classes = np.asarray(clf_params["W"]).shape
+    return ChunkResult(
+        boxes=boxes, labels=labels, valid=valid,
+        source=np.full((f, n), 2), wan_bytes=0.0, coord_bytes=0.0,
+        cloud_frames=0, latency=lat,
+        fog_features=np.zeros((f, n, feat_dim), np.float32),
+        prop_boxes=boxes,
+        prop_valid=np.zeros((f, n), bool),
+        fog_scores=np.zeros((f, n, num_classes), np.float32))
+
+
 class CloudFogCoordinator:
-    """End-to-end driver: chunks in, detections + metrics + learning out."""
+    """End-to-end single-stream driver: chunks in, detections + metrics +
+    learning out.  A thin shell over the function graph: one stream, one
+    fog node, immediate (window=0) detector dispatch — the event order then
+    degenerates to the strict sequential path."""
 
     def __init__(self, protocol: HighLowProtocol, det_params, clf_params,
-                 *, fallback_params=None, learner: IncrementalLearner = None,
+                 *, fallback_params=None, fallback_cfg=None,
+                 learner: IncrementalLearner = None,
                  annotator: OracleAnnotator = None,
                  network: NetworkModel = None, monitor: Monitor = None):
         self.protocol = protocol
         self.det_params = det_params
         self.clf_params = clf_params
         self.fallback_params = fallback_params
+        self.fallback_cfg = fallback_cfg
         self.learner = learner
         self.annotator = annotator or OracleAnnotator()
         self.network = network or protocol.network
         self.monitor = monitor or Monitor()
         self.fault = FaultTolerantCoordinator(self.network)
-        self.W = np.asarray(clf_params["W"])
-        self.clock = 0.0
+        self.graph = VideoFunctionGraph(protocol, det_params, clf_params)
+        self.scheduler = GraphScheduler(
+            self.graph, network=self.network, monitor=self.monitor,
+            batcher=CrossStreamBatcher(max_chunks=1, window=0.0),
+            fault=self.fault, fallback_fn=self._fog_fallback)
+        self._stream = self.scheduler.add_stream(
+            "cam0", W=np.asarray(clf_params["W"]), learner=learner,
+            annotator=self.annotator)
+
+    # -- state the HITL loop / tests observe ---------------------------------
+    @property
+    def W(self) -> np.ndarray:
+        return self._stream.W
+
+    @W.setter
+    def W(self, value) -> None:
+        self._stream.W = np.asarray(value)
+
+    @property
+    def clock(self) -> float:
+        return self._stream.clock
 
     # ------------------------------------------------------------------
     def _fog_fallback(self, frames: np.ndarray) -> ChunkResult:
-        """Cloud is down: run the small fog detector locally (Fig. 15)."""
-        import jax.numpy as jnp
-
-        from repro.baselines.common import threshold_detections
-        from repro.core.bandwidth import LatencyBreakdown
-
-        det = det_mod.detect(FALLBACK_DETECTOR, self.fallback_params,
-                             jnp.asarray(frames))
-        boxes, labels, valid = threshold_detections(det, 0.5, 0.25)
-        f = frames.shape[0]
-        lat = LatencyBreakdown(
-            fog_inference=self.protocol.fog.detect_time(f))
-        n = boxes.shape[1]
-        return ChunkResult(
-            boxes=boxes, labels=labels, valid=valid,
-            source=np.full((f, n), 2), wan_bytes=0.0, coord_bytes=0.0,
-            cloud_frames=0, latency=lat,
-            fog_features=np.zeros((f, n, 1)), prop_boxes=boxes,
-            prop_valid=np.zeros((f, n), bool),
-            fog_scores=np.zeros((f, n, 1)))
+        return fog_fallback_result(self.protocol, self.fallback_params,
+                                   self.clf_params, frames,
+                                   fallback_cfg=self.fallback_cfg)
 
     # ------------------------------------------------------------------
     def process_chunk(self, chunk, *, learn: bool = True) -> ChunkResult:
-        import jax.numpy as jnp
-
-        def cloud_path():
-            return self.protocol.process_chunk(
-                self.det_params, self.clf_params, chunk.frames,
-                W=jnp.asarray(self.W))
-
-        res, mode = self.fault.route(self.clock, cloud_path,
-                                     lambda: self._fog_fallback(chunk.frames))
-        self.monitor.record("latency", res.latency.total, self.clock)
-        self.monitor.record("wan_bytes", res.wan_bytes, self.clock)
-        self.monitor.incr("cloud_frames", res.cloud_frames)
-        self.clock += res.latency.total
-
-        # ---- HITL incremental learning (§V) ----
-        if (learn and self.learner is not None and mode == "cloud"
-                and not self.learner.budget_exhausted):
-            self._collect_feedback(chunk, res)
-            newW, updated = self.learner.maybe_update(jnp.asarray(self.W))
-            if updated:
-                self.W = np.asarray(newW)   # fog model-cache refresh
-                self.monitor.incr("model_updates")
+        self.scheduler.submit(self._stream, chunk, learn=learn)
+        self.scheduler.run_until_idle()
+        _, res, _ = self._stream.results[-1]
         return res
-
-    def _collect_feedback(self, chunk, res: ChunkResult) -> None:
-        for t in range(chunk.frames.shape[0]):
-            idx = np.nonzero(res.prop_valid[t])[0]
-            if not len(idx):
-                continue
-            labels = self.annotator.label_regions(
-                res.prop_boxes[t][idx], chunk.gt_boxes[t], chunk.gt_labels[t])
-            for i, lab in zip(idx, labels):
-                if lab != BACKGROUND:
-                    self.learner.collect(res.fog_features[t, i], int(lab))
 
     # ------------------------------------------------------------------
     def run(self, chunks, *, learn: bool = True) -> CoordinatorResult:
@@ -137,3 +151,94 @@ class CloudFogCoordinator:
                                "updates": self.learner.updates_done}
         return CoordinatorResult(f1.summary(), total_bytes, cost, lats,
                                  modes, learner_summary)
+
+
+# ---------------------------------------------------------------------------
+# Multi-camera execution
+# ---------------------------------------------------------------------------
+@dataclass
+class StreamSpec:
+    """One camera's workload: its chunks and (optional) per-site HITL state."""
+    name: str
+    chunks: Sequence
+    learner: Optional[IncrementalLearner] = None
+    annotator: Optional[OracleAnnotator] = None
+
+
+class MultiStreamCoordinator:
+    """N concurrent camera streams over one shared cloud detector.
+
+    Streams advance on the event-driven clock; their detector invocations
+    are batched across streams into single jit'd calls, real queue depths
+    drive the autoscaler, and each stream keeps its own fog node, model
+    cache W, and incremental learner."""
+
+    def __init__(self, protocol: HighLowProtocol, det_params, clf_params,
+                 streams: Sequence[Union[StreamSpec, Sequence]], *,
+                 fallback_params=None, fallback_cfg=None,
+                 network: NetworkModel = None,
+                 monitor: Monitor = None, max_batch_chunks: int = 8,
+                 batch_window: float = 0.02, cloud_devices: int = 1,
+                 autoscaler=None, fault: FaultTolerantCoordinator = None):
+        self.protocol = protocol
+        self.clf_params = clf_params
+        self.fallback_params = fallback_params
+        self.fallback_cfg = fallback_cfg
+        self.network = network or protocol.network
+        self.monitor = monitor or Monitor()
+        self.graph = VideoFunctionGraph(protocol, det_params, clf_params)
+        self.scheduler = GraphScheduler(
+            self.graph, network=self.network, monitor=self.monitor,
+            batcher=CrossStreamBatcher(max_chunks=max_batch_chunks,
+                                       window=batch_window),
+            cloud_devices=cloud_devices, autoscaler=autoscaler,
+            fault=fault, fallback_fn=self._fog_fallback)
+        self.specs: List[StreamSpec] = []
+        self._states: List[StreamState] = []
+        for i, s in enumerate(streams):
+            spec = s if isinstance(s, StreamSpec) else StreamSpec(
+                name=f"cam{i}", chunks=list(s))
+            self.specs.append(spec)
+            self._states.append(self.scheduler.add_stream(
+                spec.name, W=np.asarray(clf_params["W"]),
+                learner=spec.learner, annotator=spec.annotator))
+
+    def _fog_fallback(self, frames: np.ndarray) -> ChunkResult:
+        return fog_fallback_result(self.protocol, self.fallback_params,
+                                   self.clf_params, frames,
+                                   fallback_cfg=self.fallback_cfg)
+
+    # ------------------------------------------------------------------
+    def run(self, *, learn: bool = True) -> Dict[str, CoordinatorResult]:
+        for spec, state in zip(self.specs, self._states):
+            for chunk in spec.chunks:
+                self.scheduler.submit(state, chunk, learn=learn)
+        self.scheduler.run_until_idle()
+
+        out: Dict[str, CoordinatorResult] = {}
+        for spec, state in zip(self.specs, self._states):
+            f1 = F1Accumulator()
+            lats, modes = [], []
+            total_bytes = 0.0
+            cost = 0.0
+            for chunk, res, mode in state.results:
+                for t in range(chunk.frames.shape[0]):
+                    keep = res.valid[t]
+                    f1.update(res.boxes[t][keep], res.labels[t][keep],
+                              chunk.gt_boxes[t], chunk.gt_labels[t])
+                lats.append(res.latency.total)
+                modes.append(mode)
+                total_bytes += res.wan_bytes + res.coord_bytes
+                cost += self.protocol.cloud_cost(res)
+            learner_summary = {}
+            if spec.learner is not None:
+                learner_summary = {"labels_used": spec.learner.labels_used,
+                                   "updates": spec.learner.updates_done}
+            out[spec.name] = CoordinatorResult(
+                f1.summary(), total_bytes, cost, lats, modes,
+                learner_summary)
+        return out
+
+    def report(self) -> Dict[str, float]:
+        """Cross-stream batching + detect-stage throughput + scaling stats."""
+        return self.scheduler.throughput_report()

@@ -1,4 +1,5 @@
-"""High-and-Low Video Streaming — the paper's §IV protocol.
+"""High-and-Low Video Streaming — the paper's §IV protocol, decomposed into
+serverless *stage functions*.
 
 One chunk flows client -> fog -> cloud -> fog:
 
@@ -13,8 +14,18 @@ One chunk flows client -> fog -> cloud -> fog:
      cloud cost — RQ2), dynamic batching included,
   5. crops + predictions are queued for the §V HITL loop.
 
-The jit'd compute path is fixed-shape; orchestration (bytes, latency, cost
-accounting) happens at trace boundaries.
+Each hop is a separately jit'd **stage function** so the serving layer can
+dispatch them as independent serverless functions (``repro.serving.graph``):
+
+  ``encode_low``        fog quality control        (fog.encode_low)
+  ``detect_regions``    heavy cloud detector       (cloud.detect) — batchable
+                        across concurrent streams along the frame axis
+  ``split_uncertain``   §IV.B three-stage filter   (cloud side of detect)
+  ``classify_regions``  HQ crop + one-vs-all merge (fog.classify_regions)
+
+``HighLowProtocol.process_chunk`` drives the same stage functions strictly
+sequentially — the single-stream reference path.  Orchestration (bytes,
+latency, cost accounting) happens at the stage boundaries.
 """
 from __future__ import annotations
 
@@ -70,25 +81,41 @@ class ChunkResult:
 
 
 # ---------------------------------------------------------------------------
-# jit'd compute core
+# Stage functions (each one a dispatchable serverless function)
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("det_cfg", "clf_cfg", "pcfg"))
-def _compute(det_cfg: DetectorConfig, clf_cfg: ClassifierConfig,
-             pcfg: ProtocolConfig, det_params, clf_params, W,
-             frames_hq: jax.Array):
-    # fog: re-encode to low quality  (quality control stage)
-    enc = (codec.encode_inter if pcfg.inter_coding else codec.encode)(
-        frames_hq, pcfg.r_low, pcfg.q_low)
+def encode_low(pcfg: ProtocolConfig, frames_hq: jax.Array) -> codec.EncodedChunk:
+    """fog.encode_low — quality-control re-encode to (r_low, q_low)."""
+    enc_fn = codec.encode_inter if pcfg.inter_coding else codec.encode
+    return enc_fn(frames_hq, pcfg.r_low, pcfg.q_low)
 
-    # cloud: heavy detector on LOW-quality frames
-    det = det_mod.detect(det_cfg, det_params, enc.frames)
 
-    # cloud: split into accepted labels vs uncertain coordinates
+@functools.partial(jax.jit, static_argnames=("det_cfg",))
+def detect_regions(det_cfg: DetectorConfig, det_params,
+                   frames: jax.Array) -> Dict[str, jax.Array]:
+    """cloud.detect — the heavy detector on LOW-quality frames.
+
+    The leading axis is a plain frame batch: frames from *multiple
+    concurrent streams* may be concatenated (and zero-padded to a bucket)
+    into one call; per-frame outputs are independent, so callers slice the
+    result back apart."""
+    return det_mod.detect(det_cfg, det_params, frames)
+
+
+@functools.partial(jax.jit, static_argnames=("pcfg",))
+def split_uncertain(pcfg: ProtocolConfig, det: Dict[str, jax.Array]
+                    ) -> Tuple[reg.RegionSplit, jax.Array]:
+    """cloud side of detect — §IV.B split into accepted vs uncertain."""
     split = reg.split_regions(
         det, theta_cls=pcfg.theta_cls, theta_loc=pcfg.theta_loc,
         theta_iou=pcfg.theta_iou, theta_back=pcfg.theta_back, impl=pcfg.impl)
+    return split, reg.coordinate_bytes(split)
 
-    # fog: crop HQ frames at uncertain coordinates, classify one-vs-all
+
+@functools.partial(jax.jit, static_argnames=("clf_cfg", "pcfg"))
+def classify_regions(clf_cfg: ClassifierConfig, pcfg: ProtocolConfig,
+                     clf_params, W, frames_hq: jax.Array,
+                     split: reg.RegionSplit) -> Dict[str, jax.Array]:
+    """fog.classify_regions — HQ crop + one-vs-all classify + merge."""
     crops = reg.crop_batch(frames_hq, split.prop_boxes, clf_cfg.crop_hw)
     f, n = crops.shape[0], crops.shape[1]
     flat = crops.reshape(f * n, *crops.shape[2:])
@@ -104,13 +131,29 @@ def _compute(det_cfg: DetectorConfig, clf_cfg: ClassifierConfig,
     labels = jnp.where(split.acc_valid, split.acc_labels, fog_labels)
     valid = split.acc_valid | fog_valid
     source = jnp.where(split.acc_valid, 0, 1).astype(jnp.int32)
-    coord_bytes = reg.coordinate_bytes(split)
-    return (split.acc_boxes, labels, valid, source, enc.nbytes, coord_bytes,
-            fog_feats, split.prop_boxes, split.prop_valid, fog_scores)
+    return {"boxes": split.acc_boxes, "labels": labels, "valid": valid,
+            "source": source, "fog_features": fog_feats,
+            "fog_scores": fog_scores}
+
+
+def assemble_result(split: reg.RegionSplit, merged: Dict[str, jax.Array],
+                    *, wan_bytes: float, coord_bytes: float,
+                    cloud_frames: int, latency: LatencyBreakdown
+                    ) -> ChunkResult:
+    """Shared result assembly for the sequential and graph execution paths."""
+    return ChunkResult(
+        boxes=np.asarray(merged["boxes"]), labels=np.asarray(merged["labels"]),
+        valid=np.asarray(merged["valid"]), source=np.asarray(merged["source"]),
+        wan_bytes=float(wan_bytes), coord_bytes=float(coord_bytes),
+        cloud_frames=cloud_frames, latency=latency,
+        fog_features=np.asarray(merged["fog_features"]),
+        prop_boxes=np.asarray(split.prop_boxes),
+        prop_valid=np.asarray(split.prop_valid),
+        fog_scores=np.asarray(merged["fog_scores"]))
 
 
 # ---------------------------------------------------------------------------
-# Protocol driver with bytes / latency / cost accounting
+# Sequential protocol driver with bytes / latency / cost accounting
 # ---------------------------------------------------------------------------
 @dataclass
 class HighLowProtocol:
@@ -125,28 +168,25 @@ class HighLowProtocol:
     def process_chunk(self, det_params, clf_params, frames_hq: np.ndarray,
                       W=None) -> ChunkResult:
         fhq = jnp.asarray(frames_hq)
-        (boxes, labels, valid, source, wan_bytes, coord_bytes, feats,
-         prop_boxes, prop_valid, fog_scores) = _compute(
-            self.det_cfg, self.clf_cfg, self.pcfg, det_params, clf_params,
-            W if W is not None else clf_params["W"], fhq)
+        enc = encode_low(self.pcfg, fhq)
+        det = detect_regions(self.det_cfg, det_params, enc.frames)
+        split, coord_bytes = split_uncertain(self.pcfg, det)
+        merged = classify_regions(
+            self.clf_cfg, self.pcfg, clf_params,
+            W if W is not None else clf_params["W"], fhq, split)
 
         f = frames_hq.shape[0]
-        n_crops = int(np.sum(np.asarray(prop_valid)))
+        n_crops = int(np.sum(np.asarray(split.prop_valid)))
         lat = LatencyBreakdown(
             quality_control=self.fog.encode_time(f),
-            transmission=(self.network.wan_time(float(wan_bytes))
+            transmission=(self.network.wan_time(float(enc.nbytes))
                           + self.network.wan_time(float(coord_bytes))),
             cloud_inference=self.cloud.detect_time(f),
             fog_inference=self.fog.classify_time(max(n_crops, 1)),
         )
-        return ChunkResult(
-            boxes=np.asarray(boxes), labels=np.asarray(labels),
-            valid=np.asarray(valid), source=np.asarray(source),
-            wan_bytes=float(wan_bytes), coord_bytes=float(coord_bytes),
-            cloud_frames=f, latency=lat,
-            fog_features=np.asarray(feats), prop_boxes=np.asarray(prop_boxes),
-            prop_valid=np.asarray(prop_valid),
-            fog_scores=np.asarray(fog_scores))
+        return assemble_result(split, merged, wan_bytes=float(enc.nbytes),
+                               coord_bytes=float(coord_bytes),
+                               cloud_frames=f, latency=lat)
 
     def cloud_cost(self, result: ChunkResult) -> float:
         # RQ2: one cloud detector pass per frame, nothing else

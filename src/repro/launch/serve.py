@@ -1,7 +1,15 @@
-"""Serving launcher: continuous-batching LLM server over ``--arch <id>``.
+"""Serving launcher: LLM continuous batching or the video function graph.
+
+LLM mode (continuous-batching server over ``--arch <id>``):
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b-smoke \\
       --requests 8 --slots 4
+
+Video mode (N camera streams through the serverless function graph with
+cross-stream batched cloud inference + autoscaling):
+
+  PYTHONPATH=src python -m repro.launch.serve --video-streams 8 \\
+      --video-chunks 4
 """
 from __future__ import annotations
 
@@ -16,16 +24,7 @@ from repro.models import transformer as tfm
 from repro.serving.server import LLMServer, Request
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--prompt-len", type=int, default=12)
-    args = ap.parse_args()
-
+def serve_llm(args) -> None:
     cfg = get_config(args.arch)
     if cfg.num_ctx_tokens:
         raise SystemExit(f"{cfg.name} needs frontend embeddings; use the "
@@ -48,6 +47,73 @@ def main() -> None:
     for r in finished[:3]:
         print(f"  req {r.request_id}: {len(r.output)} tokens, "
               f"min-confidence {r.confidence:.3f}")
+
+
+def serve_video(args) -> None:
+    """Video function-graph serving demo: synthetic cameras, random-init
+    models (throughput/scheduling demo — accuracy needs trained weights,
+    see examples/multi_camera.py)."""
+    from repro.configs.vpaas_video import CLASSIFIER, DETECTOR
+    from repro.core.coordinator import MultiStreamCoordinator
+    from repro.core.protocol import HighLowProtocol
+    from repro.models import classifier as clf_mod
+    from repro.models import detector as det_mod
+    from repro.serving.autoscaler import Autoscaler
+    from repro.video import synthetic
+
+    det_params = det_mod.init_detector(DETECTOR, jax.random.PRNGKey(0))
+    clf_params = clf_mod.init_classifier(CLASSIFIER, jax.random.PRNGKey(1))
+    streams = [[synthetic.make_chunk(np.random.default_rng(50 + i),
+                                     "traffic", num_frames=args.video_frames)
+                for _ in range(args.video_chunks)]
+               for i in range(args.video_streams)]
+
+    scaler = Autoscaler(min_devices=1, max_devices=8, cooldown_s=0.5)
+    multi = MultiStreamCoordinator(
+        HighLowProtocol(DETECTOR, CLASSIFIER), det_params, clf_params,
+        streams, max_batch_chunks=args.video_streams,
+        batch_window=0.05, autoscaler=scaler)
+    t0 = time.time()
+    out = multi.run(learn=False)
+    dt = time.time() - t0
+    rep = multi.report()
+    total_chunks = sum(len(s) for s in streams)
+    makespan = max(st.clock for st in multi.scheduler.streams.values())
+    print(f"video graph: {args.video_streams} streams, {total_chunks} "
+          f"chunks in {dt:.1f}s wall ({makespan:.1f}s simulated)")
+    print(f"  detect stage: {rep['calls']} batched calls, "
+          f"{rep['frames']} frames (+{rep['padded_frames']} pad), "
+          f"{rep['frames_per_s']:.0f} frames/s")
+    print(f"  batching: up to {rep['batch_max_batch_chunks']} chunks/call; "
+          f"autoscaler {scaler.summary()}")
+    for name, r in list(out.items())[:3]:
+        print(f"  {name}: wan {r.bandwidth/1e3:.1f} kB, cost "
+              f"{r.cloud_cost:.0f}, mean latency "
+              f"{np.mean(r.latencies)*1e3:.0f} ms")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="LLM arch id (LLM serving mode)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--video-streams", type=int, default=0,
+                    help="serve N synthetic camera streams through the "
+                         "video function graph instead of an LLM")
+    ap.add_argument("--video-chunks", type=int, default=4)
+    ap.add_argument("--video-frames", type=int, default=4)
+    args = ap.parse_args()
+
+    if args.video_streams > 0:
+        serve_video(args)
+    elif args.arch:
+        serve_llm(args)
+    else:
+        raise SystemExit("pass --arch <id> (LLM) or --video-streams N")
 
 
 if __name__ == "__main__":

@@ -138,7 +138,7 @@ def _cache_dtype(name: str, dtype):
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32):
     shapes = _cache_shapes(cfg, batch, max_seq)
-    return jax.tree.map_with_path(
+    return jax.tree_util.tree_map_with_path(
         lambda p, shp: jnp.zeros(shp, _cache_dtype(p[-1].key, dtype)),
         shapes, is_leaf=lambda x: isinstance(x, tuple))
 
@@ -146,7 +146,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32):
 def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
                    dtype=jnp.bfloat16):
     shapes = _cache_shapes(cfg, batch, max_seq)
-    return jax.tree.map_with_path(
+    return jax.tree_util.tree_map_with_path(
         lambda p, shp: jax.ShapeDtypeStruct(shp, _cache_dtype(p[-1].key, dtype)),
         shapes, is_leaf=lambda x: isinstance(x, tuple))
 
@@ -176,7 +176,7 @@ def cache_partition_specs(cfg: ModelConfig, batch: int, max_seq: int,
             entries = [None] + entries
         return PartitionSpec(*entries)
 
-    return jax.tree.map_with_path(spec, shapes,
+    return jax.tree_util.tree_map_with_path(spec, shapes,
                                   is_leaf=lambda x: isinstance(x, tuple))
 
 

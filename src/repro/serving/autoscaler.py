@@ -32,3 +32,18 @@ class Autoscaler:
         self.history.append({"t": now, "queue": queue_len,
                              "devices": devices, "new_devices": new})
         return new
+
+    def summary(self) -> Dict[str, float]:
+        """Aggregate view of the scaling trace (for benchmarks/monitoring)."""
+        if not self.history:
+            return {"decisions": 0, "peak_queue": 0, "peak_devices": 0,
+                    "scale_ups": 0, "scale_downs": 0}
+        return {
+            "decisions": len(self.history),
+            "peak_queue": max(h["queue"] for h in self.history),
+            "peak_devices": max(h["new_devices"] for h in self.history),
+            "scale_ups": sum(h["new_devices"] > h["devices"]
+                             for h in self.history),
+            "scale_downs": sum(h["new_devices"] < h["devices"]
+                               for h in self.history),
+        }

@@ -61,6 +61,104 @@ class DynamicBatcher:
         return len(self._queue)
 
 
+# ---------------------------------------------------------------------------
+# Cross-stream frame batching (cloud detector stage)
+# ---------------------------------------------------------------------------
+@dataclass(eq=False)           # identity equality: payloads are arrays
+class DetectRequest:
+    """One chunk's detector invocation, queued for cross-stream batching."""
+    frames: Any                  # (F, H, W, 3) low-quality frames
+    arrival: float               # simulated arrival time at the cloud
+    stream: Any = None           # opaque owner handle (scheduler state)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class CrossStreamBatcher:
+    """Accumulates detector requests from concurrent chunk streams and packs
+    their frames into one padded batch for a single jit'd detector call
+    (Tangram-style SLO-aware batching of serverless video invocations).
+
+    Flush when ``max_chunks`` requests are pending or the oldest has waited
+    ``window`` seconds (simulated clock).  ``window=0`` degenerates to
+    immediate per-chunk dispatch — the sequential single-stream path."""
+    max_chunks: int = 8
+    window: float = 0.0
+    pad_buckets: Tuple[int, ...] = (2, 4, 8, 16, 32, 64)
+
+    _queue: List[DetectRequest] = field(default_factory=list)
+    stats: Dict[str, float] = field(default_factory=lambda: {
+        "batches": 0, "chunks": 0, "frames": 0, "padded_frames": 0,
+        "max_batch_chunks": 0})
+
+    def submit(self, req: DetectRequest) -> None:
+        self._queue.append(req)
+
+    def _arrived(self, now: float) -> List[DetectRequest]:
+        # only requests whose (simulated) upload has completed are eligible
+        return [r for r in self._queue if r.arrival <= now + 1e-12]
+
+    def ready(self, now: float) -> bool:
+        arrived = self._arrived(now)
+        if not arrived:
+            return False
+        oldest = min(r.arrival for r in arrived)
+        # small tolerance: the flush event fires at exactly oldest + window,
+        # and float summation must not leave the batch stranded
+        return (len(arrived) >= self.max_chunks
+                or now - oldest >= self.window - 1e-9)
+
+    def next_deadline(self) -> Optional[float]:
+        if not self._queue:
+            return None
+        return min(r.arrival for r in self._queue) + self.window
+
+    def take(self, now: float) -> List[DetectRequest]:
+        batch = sorted(self._arrived(now),
+                       key=lambda r: r.arrival)[: self.max_chunks]
+        for r in batch:
+            self._queue.remove(r)
+        self.stats["batches"] += 1
+        self.stats["chunks"] += len(batch)
+        self.stats["frames"] += sum(r.frames.shape[0] for r in batch)
+        self.stats["max_batch_chunks"] = max(self.stats["max_batch_chunks"],
+                                             len(batch))
+        return batch
+
+    @property
+    def pending_frames(self) -> int:
+        return sum(r.frames.shape[0] for r in self._queue)
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+
+def pack_frames(frame_arrays: List[np.ndarray],
+                buckets: Tuple[int, ...] = (2, 4, 8, 16, 32, 64)
+                ) -> Tuple[np.ndarray, List[slice], int]:
+    """Concatenate per-chunk frame arrays into one batch along axis 0.
+
+    Multi-chunk batches are zero-padded up to the next bucket size so the
+    jit'd detector sees few distinct shapes; a single request passes through
+    exactly as-is (no padding), keeping the sequential path bit-identical.
+    Returns (batch, per-request slices, padded_frames)."""
+    assert frame_arrays, "pack_frames needs at least one request"
+    slices, off = [], 0
+    for a in frame_arrays:
+        slices.append(slice(off, off + a.shape[0]))
+        off += a.shape[0]
+    batch = np.concatenate([np.asarray(a) for a in frame_arrays], axis=0)
+    pad = 0
+    if len(frame_arrays) > 1:
+        size = next((b for b in buckets if off <= b), None)
+        size = off if size is None else size
+        pad = size - off
+        if pad:
+            batch = np.concatenate(
+                [batch, np.zeros((pad,) + batch.shape[1:], batch.dtype)], 0)
+    return batch, slices, pad
+
+
 def batch_crops(crops: np.ndarray, valid: np.ndarray,
                 buckets: Tuple[int, ...] = (4, 8, 16, 32, 64)
                 ) -> Tuple[np.ndarray, np.ndarray, int]:

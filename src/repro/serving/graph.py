@@ -1,0 +1,332 @@
+"""Function-graph execution of the High-Low protocol (§III serverless view).
+
+The paper frames the pipeline as serverless *functions* ("model inference",
+re-encode, region-classify) orchestrated across client/fog/cloud.  This
+module makes that literal: the protocol's stage functions are registered in
+a :class:`~repro.serving.registry.FunctionRegistry` under tier-qualified
+names and dispatched through :class:`~repro.serving.executor.Executor` /
+:class:`~repro.serving.router.Router`:
+
+  ``fog.encode_low``        quality control on the per-camera fog node
+  ``cloud.detect``          heavy detector — **batched across streams**
+  ``fog.classify_regions``  HQ crop + one-vs-all classify + merge
+  ``hitl.collect``          §V feedback collection + incremental update
+
+Execution is **event-driven**: a priority queue of per-stream events
+(ingest -> flush -> finalize) replaces the old coordinator's scalar clock,
+so N camera streams advance concurrently on one simulated timeline.  The
+cloud-detector stage runs through a :class:`CrossStreamBatcher` that packs
+frames from concurrent chunks into a single padded jit'd call (Tangram-style
+batched serverless inference) and feeds the *real* queue depth to the
+autoscaler on every dispatch.
+
+With one stream and a zero batching window the event order degenerates to
+the strict sequential path, and because the same jit'd stage functions are
+reused, results are bit-identical to ``HighLowProtocol.process_chunk``.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import protocol as protocol_mod
+from repro.core.bandwidth import LatencyBreakdown, NetworkModel
+from repro.core.hitl import BACKGROUND, OracleAnnotator
+from repro.core.protocol import ChunkResult, HighLowProtocol
+from repro.serving.batching import (CrossStreamBatcher, DetectRequest,
+                                    pack_frames)
+from repro.serving.executor import Executor
+from repro.serving.monitor import Monitor
+from repro.serving.registry import Dispatcher, FunctionRegistry, ModelZoo
+from repro.serving.router import Router
+
+STAGE_ENCODE = "fog.encode_low"
+STAGE_DETECT = "cloud.detect"
+STAGE_CLASSIFY = "fog.classify_regions"
+STAGE_COLLECT = "hitl.collect"
+STAGES = (STAGE_ENCODE, STAGE_DETECT, STAGE_CLASSIFY, STAGE_COLLECT)
+
+
+# ---------------------------------------------------------------------------
+# The graph: protocol stages as registered serverless functions
+# ---------------------------------------------------------------------------
+@dataclass
+class VideoFunctionGraph:
+    """Registers the High-Low stages + models into the serving substrate."""
+    protocol: HighLowProtocol
+    det_params: Any
+    clf_params: Any
+    registry: FunctionRegistry = field(default_factory=FunctionRegistry)
+    zoo: ModelZoo = field(default_factory=ModelZoo)
+
+    def __post_init__(self):
+        p = self.protocol
+        self.registry.register(STAGE_ENCODE, self._encode, kind="preprocess",
+                               tier="fog")
+        self.registry.register(STAGE_DETECT, self._detect, kind="inference",
+                               tier="cloud", batchable=True)
+        self.registry.register(STAGE_CLASSIFY, self._classify,
+                               kind="inference", tier="fog")
+        self.registry.register(STAGE_COLLECT, self._collect,
+                               kind="postprocess", tier="fog")
+        self.zoo.register("cloud-detector", self.det_params, p.det_cfg)
+        self.zoo.register("fog-classifier", self.clf_params, p.clf_cfg)
+        self.dispatcher = Dispatcher(self.registry, self.zoo)
+        self.dispatcher.dispatch("cloud", STAGE_DETECT)
+        self.dispatcher.dispatch("cloud", "cloud-detector")
+        for name in (STAGE_ENCODE, STAGE_CLASSIFY, STAGE_COLLECT,
+                     "fog-classifier"):
+            self.dispatcher.dispatch("fog", name)
+
+    # -- stage callables (close over configs/params) ------------------------
+    def _encode(self, frames_hq):
+        return protocol_mod.encode_low(self.protocol.pcfg,
+                                       jnp.asarray(frames_hq))
+
+    def _detect(self, frames):
+        return protocol_mod.detect_regions(self.protocol.det_cfg,
+                                           self.det_params, frames)
+
+    def _classify(self, frames_hq, split, W):
+        return protocol_mod.classify_regions(
+            self.protocol.clf_cfg, self.protocol.pcfg, self.clf_params, W,
+            frames_hq, split)
+
+    def _collect(self, stream: "StreamState", chunk, res: ChunkResult) -> int:
+        """HITL feedback for one finished chunk; returns 1 on a W update."""
+        learner = stream.learner
+        annotator = stream.annotator
+        for t in range(chunk.frames.shape[0]):
+            idx = np.nonzero(res.prop_valid[t])[0]
+            if not len(idx):
+                continue
+            labels = annotator.label_regions(
+                res.prop_boxes[t][idx], chunk.gt_boxes[t], chunk.gt_labels[t])
+            for i, lab in zip(idx, labels):
+                if lab != BACKGROUND:
+                    learner.collect(res.fog_features[t, i], int(lab))
+        newW, updated = learner.maybe_update(jnp.asarray(stream.W))
+        if updated:
+            stream.W = np.asarray(newW)   # fog model-cache refresh
+            return 1
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# Per-stream state
+# ---------------------------------------------------------------------------
+@dataclass
+class StreamState:
+    """One camera stream: its fog node, model cache, and HITL state."""
+    name: str
+    W: np.ndarray
+    fog_exec: Executor
+    learner: Any = None
+    annotator: Any = None
+    clock: float = 0.0
+    busy: bool = False
+    pending: Deque[Tuple[Any, bool]] = field(default_factory=deque)
+    results: List[Tuple[Any, ChunkResult, str]] = field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+# Event-driven scheduler
+# ---------------------------------------------------------------------------
+class GraphScheduler:
+    """Priority-queue scheduler over the function graph.
+
+    Events: ``ingest`` (chunk enters its stream's fog node), ``flush``
+    (cross-stream batcher dispatches the cloud detector), ``finalize``
+    (chunk result lands; HITL runs; the stream pulls its next chunk).
+    """
+
+    def __init__(self, graph: VideoFunctionGraph, *,
+                 network: Optional[NetworkModel] = None,
+                 monitor: Optional[Monitor] = None,
+                 batcher: Optional[CrossStreamBatcher] = None,
+                 cloud_devices: int = 1, autoscaler=None,
+                 fault=None, fallback_fn: Optional[Callable] = None):
+        proto = graph.protocol
+        self.graph = graph
+        self.network = network or proto.network
+        self.monitor = monitor or Monitor()
+        # explicit None check: an empty batcher is falsy (it has __len__)
+        self.batcher = (batcher if batcher is not None
+                        else CrossStreamBatcher(max_chunks=1, window=0.0))
+        self.cloud_executor = Executor("cloud", graph.registry, proto.cloud,
+                                       num_devices=cloud_devices)
+        self.router = Router([self.cloud_executor], monitor=self.monitor,
+                             autoscaler=autoscaler)
+        self.autoscaler = autoscaler
+        self.fault = fault
+        self.fallback_fn = fallback_fn
+        self.streams: Dict[str, StreamState] = {}
+        self._events: List[Tuple[float, int, str, dict]] = []
+        self._seq = itertools.count()
+        # wall-clock accounting for the jit'd detect stage (throughput lever)
+        self.detect_stats = {"calls": 0, "frames": 0, "padded_frames": 0,
+                             "wall_s": 0.0}
+
+    # ------------------------------------------------------------------
+    def add_stream(self, name: str, *, W, learner=None,
+                   annotator=None) -> StreamState:
+        fog_exec = Executor(f"fog-{name}", self.graph.registry,
+                            self.graph.protocol.fog)
+        st = StreamState(name=name, W=np.asarray(W), fog_exec=fog_exec,
+                         learner=learner,
+                         annotator=annotator or OracleAnnotator())
+        self.streams[name] = st
+        return st
+
+    def submit(self, stream: StreamState, chunk, *, learn: bool = True
+               ) -> None:
+        stream.pending.append((chunk, learn))
+        self._pull_next(stream)
+
+    def _pull_next(self, stream: StreamState) -> None:
+        if stream.busy or not stream.pending:
+            return
+        chunk, learn = stream.pending.popleft()
+        stream.busy = True
+        self._push(stream.clock, "ingest",
+                   dict(stream=stream, chunk=chunk, learn=learn))
+
+    def _push(self, t: float, action: str, data: dict) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), action, data))
+
+    # ------------------------------------------------------------------
+    def run_until_idle(self) -> None:
+        """Drain the event queue (all submitted chunks reach finalize)."""
+        while self._events or len(self.batcher):
+            if not self._events:
+                # safety net: no event left but requests still queued
+                # (guards against any residual deadline arithmetic slip —
+                # a stranded request must never be silently dropped)
+                t = self.batcher.next_deadline()
+                self._run_batch(t, self.batcher.take(t))
+                continue
+            t, _, action, data = heapq.heappop(self._events)
+            if action == "ingest":
+                self._ingest(t, **data)
+            elif action == "flush":
+                self._flush(t)
+            else:
+                self._finalize(t, data)
+
+    # ------------------------------------------------------------------
+    def _ingest(self, t: float, stream: StreamState, chunk,
+                learn: bool) -> None:
+        mode = "cloud"
+        if self.fault is not None:
+            mode = self.fault.heartbeat(t)
+        if mode != "cloud":
+            res = self.fallback_fn(chunk.frames)
+            self._push(t + res.latency.total, "finalize",
+                       dict(stream=stream, chunk=chunk, res=res, mode=mode,
+                            learn=learn, t0=t))
+            return
+
+        proto = self.graph.protocol
+        f = chunk.frames.shape[0]
+        qc = proto.fog.encode_time(f)
+        enc, _ = stream.fog_exec.run(STAGE_ENCODE, chunk.frames, now=t,
+                                     model_time=qc)
+        wan_up = self.network.wan_time(float(enc.nbytes))
+        arrival = t + qc + wan_up
+        self.batcher.submit(DetectRequest(
+            frames=np.asarray(enc.frames), arrival=arrival, stream=stream,
+            meta=dict(chunk=chunk, learn=learn, t0=t, qc=qc, wan_up=wan_up,
+                      wan_bytes=float(enc.nbytes))))
+        self._push(arrival, "flush", {})
+        if self.batcher.window > 0:
+            self._push(arrival + self.batcher.window, "flush", {})
+
+    def _flush(self, t: float) -> None:
+        while self.batcher.ready(t):
+            self._run_batch(t, self.batcher.take(t))
+
+    def _run_batch(self, t: float, reqs: List[DetectRequest]) -> None:
+        proto = self.graph.protocol
+        batch, slices, pad = pack_frames([r.frames for r in reqs],
+                                         buckets=self.batcher.pad_buckets)
+        n_frames = batch.shape[0]
+        svc = proto.cloud.detect_time(n_frames)
+        # real queue depth (frames still waiting / in flight to the cloud)
+        queue_depth = self.batcher.pending_frames
+        w0 = time.perf_counter()
+        det, done, _ = self.router.route(STAGE_DETECT, jnp.asarray(batch),
+                                         now=t, model_time=svc,
+                                         queue_depth=queue_depth)
+        jax.block_until_ready(det)
+        self.detect_stats["calls"] += 1
+        self.detect_stats["frames"] += n_frames - pad
+        self.detect_stats["padded_frames"] += pad
+        self.detect_stats["wall_s"] += time.perf_counter() - w0
+        start = done - svc
+
+        for req, sl in zip(reqs, slices):
+            det_i = {k: v[sl] for k, v in det.items()}
+            split, coord_bytes = protocol_mod.split_uncertain(proto.pcfg,
+                                                              det_i)
+            wan_down = self.network.wan_time(float(coord_bytes))
+            n_crops = int(np.sum(np.asarray(split.prop_valid)))
+            clf_time = proto.fog.classify_time(max(n_crops, 1))
+            stream = req.stream
+            chunk = req.meta["chunk"]
+            merged, _ = stream.fog_exec.run(
+                STAGE_CLASSIFY, jnp.asarray(chunk.frames), split,
+                jnp.asarray(stream.W), now=done + wan_down,
+                model_time=clf_time)
+            lat = LatencyBreakdown(
+                quality_control=req.meta["qc"],
+                transmission=req.meta["wan_up"] + wan_down,
+                cloud_inference=svc,
+                fog_inference=clf_time,
+                queue_wait=max(0.0, start - req.arrival))
+            res = protocol_mod.assemble_result(
+                split, merged, wan_bytes=req.meta["wan_bytes"],
+                coord_bytes=float(coord_bytes),
+                cloud_frames=req.frames.shape[0], latency=lat)
+            self._push(req.meta["t0"] + lat.total, "finalize",
+                       dict(stream=stream, chunk=chunk, res=res,
+                            mode="cloud", learn=req.meta["learn"],
+                            t0=req.meta["t0"]))
+
+    def _finalize(self, t: float, data: dict) -> None:
+        stream, chunk, res = data["stream"], data["chunk"], data["res"]
+        t0 = data["t0"]
+        self.monitor.record("latency", res.latency.total, t0)
+        self.monitor.record("wan_bytes", res.wan_bytes, t0)
+        self.monitor.incr("cloud_frames", res.cloud_frames)
+        if (data["learn"] and stream.learner is not None
+                and data["mode"] == "cloud"
+                and not stream.learner.budget_exhausted):
+            updated, _ = stream.fog_exec.run(STAGE_COLLECT, stream, chunk,
+                                             res, now=t, model_time=0.0)
+            if updated:
+                self.monitor.incr("model_updates")
+        stream.clock = t
+        stream.results.append((chunk, res, data["mode"]))
+        stream.busy = False
+        self._pull_next(stream)
+
+    # ------------------------------------------------------------------
+    def throughput_report(self) -> Dict[str, float]:
+        """Wall-clock throughput of the jit'd detect stage + batch stats."""
+        d = dict(self.detect_stats)
+        d["frames_per_s"] = (d["frames"] / d["wall_s"] if d["wall_s"] > 0
+                             else 0.0)
+        d.update({f"batch_{k}": v for k, v in self.batcher.stats.items()})
+        if self.autoscaler is not None and self.autoscaler.history:
+            s = self.autoscaler.summary()
+            d["peak_devices"] = s["peak_devices"]
+            d["peak_queue"] = s["peak_queue"]
+        return d

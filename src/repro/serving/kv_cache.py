@@ -67,5 +67,5 @@ class CachePool:
             return pool_leaf.at[tuple(idx)].set(
                 jnp.take(new_leaf, 0, axis=bdim))
 
-        self.cache = jax.tree.map_with_path(upd, self.cache, new_cache)
+        self.cache = jax.tree_util.tree_map_with_path(upd, self.cache, new_cache)
         self.slots[slot].length = length

@@ -52,8 +52,13 @@ class Router:
 
     # ------------------------------------------------------------------
     def route(self, fn_name: str, *args, now: Optional[float] = None,
-              model_time: Optional[float] = None, **kw):
-        """Dispatch one request; returns (result, completion_time, replica)."""
+              model_time: Optional[float] = None,
+              queue_depth: Optional[int] = None, **kw):
+        """Dispatch one request; returns (result, completion_time, replica).
+
+        ``queue_depth`` lets callers that maintain a real request queue
+        (e.g. the cross-stream graph scheduler) feed the autoscaler the
+        actual backlog instead of the per-replica busy-time heuristic."""
         now = self.clock if now is None else now
         self.clock = max(self.clock, now)
         idx = self._pick()
@@ -70,11 +75,14 @@ class Router:
         self.monitor.record("route_latency", done - now, now)
         self.monitor.incr(f"served_replica_{idx}")
         if self.autoscaler is not None:
-            # queue pressure = backlog seconds ahead of `now`, in units of
-            # this request's service time
-            backlog = max(0.0, min(rep.executor.busy_until) - now)
-            unit = model_time if model_time else max(done - now, 1e-9)
-            queue = int(backlog / max(unit, 1e-9))
+            if queue_depth is None:
+                # queue pressure = backlog seconds ahead of `now`, in units
+                # of this request's service time
+                backlog = max(0.0, min(rep.executor.busy_until) - now)
+                unit = model_time if model_time else max(done - now, 1e-9)
+                queue = int(backlog / max(unit, 1e-9))
+            else:
+                queue = queue_depth
             target = self.autoscaler.decide(done, queue,
                                             rep.executor.num_devices)
             if target != rep.executor.num_devices:

@@ -1,0 +1,264 @@
+"""Function-graph execution: dispatcher stages, event-driven scheduling,
+cross-stream batching, and equivalence with the sequential protocol path.
+
+Uses randomly initialised (untrained) models throughout — every check here
+is about *execution semantics* (bit-identical numerics, conservation,
+batching/scaling behaviour), not accuracy, so no training is needed and the
+module stays fast."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.vpaas_video import ClassifierConfig, DetectorConfig
+from repro.core.coordinator import (CloudFogCoordinator,
+                                    MultiStreamCoordinator, StreamSpec)
+from repro.core.incremental import IncrementalLearner
+from repro.core.protocol import HighLowProtocol
+from repro.models import classifier as clf_mod
+from repro.models import detector as det_mod
+from repro.serving.autoscaler import Autoscaler
+from repro.serving.batching import (CrossStreamBatcher, DetectRequest,
+                                    pack_frames)
+from repro.serving.graph import STAGES, VideoFunctionGraph
+
+# small configs: the graph semantics are size-independent
+DET = DetectorConfig(name="graph-test-det", image_hw=(32, 32),
+                     widths=(8, 16))
+CLF = ClassifierConfig(name="graph-test-clf", crop_hw=(16, 16),
+                       widths=(8, 16), feature_dim=16)
+FB = DetectorConfig(name="graph-test-fallback", image_hw=(32, 32),
+                    widths=(4, 8))
+
+
+@pytest.fixture(scope="module")
+def models():
+    det_params = det_mod.init_detector(DET, jax.random.PRNGKey(0))
+    clf_params = clf_mod.init_classifier(CLF, jax.random.PRNGKey(1))
+    fb_params = det_mod.init_detector(FB, jax.random.PRNGKey(2))
+    return det_params, clf_params, fb_params
+
+
+def _chunks(seed, n, frames=2):
+    from repro.video import synthetic
+    rng = np.random.default_rng(seed)
+    return [synthetic.make_chunk(rng, "traffic", num_frames=frames,
+                                 hw=(32, 32)) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Stage registration / dispatch surface
+# ---------------------------------------------------------------------------
+def test_graph_registers_stages_and_models(models):
+    det_params, clf_params, _ = models
+    graph = VideoFunctionGraph(HighLowProtocol(DET, CLF), det_params,
+                               clf_params)
+    for name in STAGES:
+        assert name in graph.registry
+    assert graph.registry.entry("cloud.detect").metadata["tier"] == "cloud"
+    assert graph.registry.entry("cloud.detect").metadata["batchable"]
+    assert graph.registry.entry("fog.encode_low").kind == "preprocess"
+    assert graph.registry.list(kind="inference") == [
+        "cloud.detect", "fog.classify_regions"]
+    assert "cloud-detector" in graph.zoo and "fog-classifier" in graph.zoo
+    assert "cloud.detect" in graph.dispatcher.deployed("cloud")
+    assert "fog.classify_regions" in graph.dispatcher.deployed("fog")
+
+
+# ---------------------------------------------------------------------------
+# Single-stream graph execution == sequential protocol path
+# ---------------------------------------------------------------------------
+def test_single_stream_matches_sequential(models):
+    det_params, clf_params, _ = models
+    chunks = _chunks(42, 3)
+
+    coord = CloudFogCoordinator(HighLowProtocol(DET, CLF), det_params,
+                                clf_params)
+    out = coord.run(chunks, learn=False)
+
+    # reference: drive the stage functions strictly sequentially
+    proto = HighLowProtocol(DET, CLF)
+    from repro.video.metrics import F1Accumulator
+    acc = F1Accumulator()
+    bytes_ref, cost_ref, lats_ref = 0.0, 0.0, []
+    for c in chunks:
+        res = proto.process_chunk(det_params, clf_params, c.frames)
+        for t in range(c.frames.shape[0]):
+            keep = res.valid[t]
+            acc.update(res.boxes[t][keep], res.labels[t][keep],
+                       c.gt_boxes[t], c.gt_labels[t])
+        bytes_ref += res.wan_bytes + res.coord_bytes
+        cost_ref += proto.cloud_cost(res)
+        lats_ref.append(res.latency.total)
+
+    assert out.f1 == acc.summary()          # exact, not approximate
+    assert out.bandwidth == bytes_ref
+    assert out.cloud_cost == cost_ref
+    assert out.latencies == lats_ref
+    # graph bookkeeping: every chunk passed through the executors
+    assert coord.scheduler.cloud_executor.records
+    assert all(r.fn_name == "cloud.detect"
+               for r in coord.scheduler.cloud_executor.records)
+    # no batching delay on the sequential path
+    assert all(r.latency.queue_wait == 0.0
+               for _, r, _ in coord._stream.results)
+
+
+def test_single_stream_results_bitwise_equal(models):
+    det_params, clf_params, _ = models
+    chunk = _chunks(7, 1)[0]
+    coord = CloudFogCoordinator(HighLowProtocol(DET, CLF), det_params,
+                                clf_params)
+    res_graph = coord.process_chunk(chunk, learn=False)
+    res_seq = HighLowProtocol(DET, CLF).process_chunk(
+        det_params, clf_params, chunk.frames)
+    np.testing.assert_array_equal(res_graph.boxes, res_seq.boxes)
+    np.testing.assert_array_equal(res_graph.labels, res_seq.labels)
+    np.testing.assert_array_equal(res_graph.valid, res_seq.valid)
+    np.testing.assert_array_equal(res_graph.fog_features,
+                                  res_seq.fog_features)
+    assert res_graph.wan_bytes == res_seq.wan_bytes
+    assert res_graph.coord_bytes == res_seq.coord_bytes
+    assert res_graph.latency.total == res_seq.latency.total
+
+
+# ---------------------------------------------------------------------------
+# Multi-stream: conservation + batching actually happens
+# ---------------------------------------------------------------------------
+def test_four_streams_conserve_per_stream_detections(models):
+    det_params, clf_params, _ = models
+    streams = [_chunks(100 + i, 2) for i in range(4)]
+
+    multi = MultiStreamCoordinator(HighLowProtocol(DET, CLF), det_params,
+                                   clf_params, streams,
+                                   max_batch_chunks=4, batch_window=0.05)
+    mout = multi.run(learn=False)
+    report = multi.report()
+    assert report["batch_max_batch_chunks"] > 1   # cross-stream batches formed
+
+    for i, chunks in enumerate(streams):
+        solo = CloudFogCoordinator(HighLowProtocol(DET, CLF), det_params,
+                                   clf_params)
+        sout = solo.run(chunks, learn=False)
+        name = f"cam{i}"
+        assert mout[name].f1 == sout.f1
+        assert mout[name].bandwidth == sout.bandwidth
+        assert mout[name].cloud_cost == sout.cloud_cost
+        for (_, r1, _), (_, r2, _) in zip(
+                multi.scheduler.streams[name].results,
+                solo._stream.results):
+            np.testing.assert_array_equal(r1.valid, r2.valid)
+            np.testing.assert_array_equal(r1.boxes, r2.boxes)
+            np.testing.assert_array_equal(r1.labels, r2.labels)
+
+
+def test_multi_stream_hitl_stays_per_stream(models):
+    det_params, clf_params, _ = models
+    specs = [StreamSpec(name=f"cam{i}", chunks=_chunks(200 + i, 2),
+                        learner=IncrementalLearner(
+                            num_classes=CLF.num_classes, trigger=4,
+                            budget=64, rule="proximal"))
+             for i in range(2)]
+    multi = MultiStreamCoordinator(HighLowProtocol(DET, CLF), det_params,
+                                   clf_params, specs, max_batch_chunks=2,
+                                   batch_window=0.05)
+    out = multi.run(learn=True)
+    for spec in specs:
+        assert out[spec.name].learner_summary["labels_used"] \
+            == spec.learner.labels_used
+    # per-stream model caches are independent objects
+    w0 = multi.scheduler.streams["cam0"].W
+    w1 = multi.scheduler.streams["cam1"].W
+    assert w0 is not w1
+
+
+# ---------------------------------------------------------------------------
+# Batching substrate
+# ---------------------------------------------------------------------------
+def test_cross_stream_batcher_flush_rules():
+    b = CrossStreamBatcher(max_chunks=3, window=0.05)
+    f = np.zeros((2, 8, 8, 3), np.float32)
+    b.submit(DetectRequest(frames=f, arrival=0.00))
+    b.submit(DetectRequest(frames=f, arrival=0.01))
+    b.submit(DetectRequest(frames=f, arrival=0.50))   # arrives much later
+    assert not b.ready(now=0.01)          # 2 arrived, window not elapsed
+    assert b.ready(now=0.06)              # oldest waited past the window
+    batch = b.take(now=0.06)
+    assert len(batch) == 2                # the late request is NOT grabbed
+    assert b.pending_frames == 2
+    assert b.ready(now=0.60)
+    assert len(b.take(now=0.60)) == 1
+    assert len(b) == 0
+
+    b2 = CrossStreamBatcher(max_chunks=2, window=10.0)
+    b2.submit(DetectRequest(frames=f, arrival=0.0))
+    b2.submit(DetectRequest(frames=f, arrival=0.0))
+    assert b2.ready(now=0.0)              # full beats the window
+    assert len(b2.take(now=0.0)) == 2
+
+    # float-rounding regression: the flush event fires at exactly
+    # arrival + window; summation error (0.3 + 0.05 -> 0.04999...) must
+    # not strand the batch
+    b3 = CrossStreamBatcher(max_chunks=8, window=0.05)
+    b3.submit(DetectRequest(frames=f, arrival=0.3))
+    assert b3.ready(now=0.3 + 0.05)
+
+
+def test_pack_frames_padding_semantics():
+    a = np.random.rand(2, 8, 8, 3).astype(np.float32)
+    b = np.random.rand(3, 8, 8, 3).astype(np.float32)
+    # single request: exact shape, no padding (bit-identical fast path)
+    batch, slices, pad = pack_frames([a])
+    assert batch.shape[0] == 2 and pad == 0
+    np.testing.assert_array_equal(batch, a)
+    # multi request: concatenated then zero-padded to the next bucket
+    batch, slices, pad = pack_frames([a, b], buckets=(2, 4, 8))
+    assert batch.shape[0] == 8 and pad == 3
+    np.testing.assert_array_equal(batch[slices[0]], a)
+    np.testing.assert_array_equal(batch[slices[1]], b)
+    assert not batch[5:].any()
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler sees real queue depths
+# ---------------------------------------------------------------------------
+def test_autoscaler_fed_real_queue_depth(models):
+    det_params, clf_params, _ = models
+    streams = [_chunks(300 + i, 2) for i in range(6)]
+    scaler = Autoscaler(min_devices=1, max_devices=4, cooldown_s=0.0,
+                        target_queue_per_device=2.0)
+    multi = MultiStreamCoordinator(HighLowProtocol(DET, CLF), det_params,
+                                   clf_params, streams,
+                                   max_batch_chunks=2, batch_window=0.0,
+                                   autoscaler=scaler)
+    multi.run(learn=False)
+    assert scaler.history                      # decisions were recorded
+    assert max(h["queue"] for h in scaler.history) > 0   # real backlog seen
+    assert scaler.summary()["peak_devices"] >= 1
+    assert multi.scheduler.cloud_executor.num_devices >= 1
+
+
+# ---------------------------------------------------------------------------
+# Fog fallback keeps real HITL hand-off shapes (outage regression)
+# ---------------------------------------------------------------------------
+def test_fog_fallback_feature_shapes(models):
+    det_params, clf_params, fb_params = models
+    chunks = _chunks(5, 2)
+    learner = IncrementalLearner(num_classes=CLF.num_classes, trigger=2,
+                                 budget=16)
+    coord = CloudFogCoordinator(
+        HighLowProtocol(DET, CLF), det_params, clf_params,
+        fallback_params=fb_params, fallback_cfg=FB, learner=learner)
+    coord.network.up = False
+    coord.process_chunk(chunks[0], learn=True)     # first miss tolerated
+    res = coord.process_chunk(chunks[1], learn=True)  # failover
+    assert coord.fault.mode == "fog-fallback"
+    # the stub must carry the classifier's real feature/score dims,
+    # derived from clf_params — not a zero-width placeholder
+    assert res.fog_features.shape[-1] == CLF.feature_dim + 1
+    assert res.fog_scores.shape[-1] == CLF.num_classes
+    # a feature row from the outage stub is shape-compatible with the learner
+    import jax.numpy as jnp
+    assert learner.collect(res.fog_features[0, 0], 0)
+    assert learner.collect(res.fog_features[0, 1], 1)
+    newW, updated = learner.maybe_update(jnp.asarray(clf_params["W"]))
+    assert updated and newW.shape == np.asarray(clf_params["W"]).shape
