@@ -25,6 +25,7 @@ BENCHES = [
     ("fig15_fault_tolerance", "benchmarks.bench_fault_tolerance"),
     ("fig16_autoscale", "benchmarks.bench_autoscale"),
     ("multistream", "benchmarks.bench_multistream"),
+    ("slo_serving", "benchmarks.bench_slo_serving"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline_table"),
 ]

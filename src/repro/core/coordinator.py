@@ -158,20 +158,28 @@ class CloudFogCoordinator:
 # ---------------------------------------------------------------------------
 @dataclass
 class StreamSpec:
-    """One camera's workload: its chunks and (optional) per-site HITL state."""
+    """One camera's workload: its chunks and (optional) per-site HITL state.
+
+    ``slo`` is the stream's end-to-end per-chunk latency target (seconds,
+    simulated; None = best-effort / coordinator default) and ``weight`` its
+    fair-queueing weight (higher = more detector service under backlog)."""
     name: str
     chunks: Sequence
     learner: Optional[IncrementalLearner] = None
     annotator: Optional[OracleAnnotator] = None
+    slo: Optional[float] = None
+    weight: float = 1.0
 
 
 class MultiStreamCoordinator:
-    """N concurrent camera streams over one shared cloud detector.
+    """N concurrent camera streams over a shared cloud detector pool.
 
     Streams advance on the event-driven clock; their detector invocations
-    are batched across streams into single jit'd calls, real queue depths
-    drive the autoscaler, and each stream keeps its own fog node, model
-    cache W, and incremental learner."""
+    are batched across streams (deadline-driven when streams carry SLOs,
+    fixed-window otherwise), sharded across ``cloud_replicas`` health-
+    checked replicas, real queue depths drive the autoscaler (which can
+    scale devices or whole replicas), and each stream keeps its own fog
+    node, model cache W, and incremental learner."""
 
     def __init__(self, protocol: HighLowProtocol, det_params, clf_params,
                  streams: Sequence[Union[StreamSpec, Sequence]], *,
@@ -179,6 +187,9 @@ class MultiStreamCoordinator:
                  network: NetworkModel = None,
                  monitor: Monitor = None, max_batch_chunks: int = 8,
                  batch_window: float = 0.02, cloud_devices: int = 1,
+                 cloud_replicas: int = 1, slo: Optional[float] = None,
+                 deadline_batching: bool = True,
+                 scale_unit: Optional[str] = None,
                  autoscaler=None, fault: FaultTolerantCoordinator = None):
         self.protocol = protocol
         self.clf_params = clf_params
@@ -187,11 +198,17 @@ class MultiStreamCoordinator:
         self.network = network or protocol.network
         self.monitor = monitor or Monitor()
         self.graph = VideoFunctionGraph(protocol, det_params, clf_params)
+        if scale_unit is None:
+            # with a replica pool the autoscaler manages replicas; a single
+            # executor keeps the legacy in-place device scaling
+            scale_unit = "replicas" if cloud_replicas > 1 else "devices"
         self.scheduler = GraphScheduler(
             self.graph, network=self.network, monitor=self.monitor,
             batcher=CrossStreamBatcher(max_chunks=max_batch_chunks,
                                        window=batch_window),
-            cloud_devices=cloud_devices, autoscaler=autoscaler,
+            cloud_devices=cloud_devices, cloud_replicas=cloud_replicas,
+            autoscaler=autoscaler, scale_unit=scale_unit,
+            deadline_batching=deadline_batching,
             fault=fault, fallback_fn=self._fog_fallback)
         self.specs: List[StreamSpec] = []
         self._states: List[StreamState] = []
@@ -201,7 +218,9 @@ class MultiStreamCoordinator:
             self.specs.append(spec)
             self._states.append(self.scheduler.add_stream(
                 spec.name, W=np.asarray(clf_params["W"]),
-                learner=spec.learner, annotator=spec.annotator))
+                learner=spec.learner, annotator=spec.annotator,
+                slo=spec.slo if spec.slo is not None else slo,
+                weight=spec.weight))
 
     def _fog_fallback(self, frames: np.ndarray) -> ChunkResult:
         return fog_fallback_result(self.protocol, self.fallback_params,

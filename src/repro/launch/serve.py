@@ -10,6 +10,12 @@ cross-stream batched cloud inference + autoscaling):
 
   PYTHONPATH=src python -m repro.launch.serve --video-streams 8 \\
       --video-chunks 4
+
+SLO-aware serving plane (per-stream latency SLOs with deadline-driven
+batching, detector replica sharding, weighted-fair stream priorities):
+
+  PYTHONPATH=src python -m repro.launch.serve --video-streams 8 \\
+      --video-replicas 2 --video-slo 0.4 --video-weights 4,1
 """
 from __future__ import annotations
 
@@ -68,11 +74,23 @@ def serve_video(args) -> None:
                 for _ in range(args.video_chunks)]
                for i in range(args.video_streams)]
 
-    scaler = Autoscaler(min_devices=1, max_devices=8, cooldown_s=0.5)
+    weights = [1.0] * args.video_streams
+    if args.video_weights:
+        given = [float(w) for w in args.video_weights.split(",")]
+        weights = (given + weights)[: args.video_streams]
+    from repro.core.coordinator import StreamSpec
+    specs = [StreamSpec(name=f"cam{i}", chunks=chunks,
+                        slo=args.video_slo or None, weight=weights[i])
+             for i, chunks in enumerate(streams)]
+
+    scaler = Autoscaler(min_devices=1, max_devices=8, cooldown_s=0.5,
+                        unit="replicas" if args.video_replicas > 1
+                        else "devices")
     multi = MultiStreamCoordinator(
         HighLowProtocol(DETECTOR, CLASSIFIER), det_params, clf_params,
-        streams, max_batch_chunks=args.video_streams,
-        batch_window=0.05, autoscaler=scaler)
+        specs, max_batch_chunks=args.video_streams,
+        batch_window=args.video_window,
+        cloud_replicas=args.video_replicas, autoscaler=scaler)
     t0 = time.time()
     out = multi.run(learn=False)
     dt = time.time() - t0
@@ -83,9 +101,17 @@ def serve_video(args) -> None:
           f"chunks in {dt:.1f}s wall ({makespan:.1f}s simulated)")
     print(f"  detect stage: {rep['calls']} batched calls, "
           f"{rep['frames']} frames (+{rep['padded_frames']} pad), "
-          f"{rep['frames_per_s']:.0f} frames/s")
-    print(f"  batching: up to {rep['batch_max_batch_chunks']} chunks/call; "
+          f"{rep['frames_per_s']:.0f} frames/s wall, "
+          f"{rep.get('sim_frames_per_s', 0):.0f} frames/s simulated "
+          f"across {rep['replicas']} replica(s)")
+    print(f"  batching: up to {rep['batch_max_batch_chunks']} chunks/call "
+          f"({rep['batch_deadline_flushes']:.0f} deadline-driven); "
           f"autoscaler {scaler.summary()}")
+    if args.video_slo:
+        mon = multi.scheduler.monitor
+        print(f"  SLO {args.video_slo*1e3:.0f} ms: attainment "
+              f"{rep.get('slo_attainment', 0.0):.2f}, p99 latency "
+              f"{mon.percentile('latency', 99)*1e3:.0f} ms")
     for name, r in list(out.items())[:3]:
         print(f"  {name}: wan {r.bandwidth/1e3:.1f} kB, cost "
               f"{r.cloud_cost:.0f}, mean latency "
@@ -106,6 +132,17 @@ def main() -> None:
                          "video function graph instead of an LLM")
     ap.add_argument("--video-chunks", type=int, default=4)
     ap.add_argument("--video-frames", type=int, default=4)
+    ap.add_argument("--video-replicas", type=int, default=1,
+                    help="cloud detector replicas (batches are sharded "
+                         "across them; autoscaler then scales replicas)")
+    ap.add_argument("--video-slo", type=float, default=0.0,
+                    help="per-chunk end-to-end latency SLO in seconds "
+                         "(0 = best-effort fixed-window batching)")
+    ap.add_argument("--video-weights", default="",
+                    help="comma-separated per-stream fair-queueing weights "
+                         "(e.g. 4,1,1 — cam0 gets 4x detector service)")
+    ap.add_argument("--video-window", type=float, default=0.05,
+                    help="fixed batching window for streams without an SLO")
     args = ap.parse_args()
 
     if args.video_streams > 0:

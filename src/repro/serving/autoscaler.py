@@ -1,4 +1,11 @@
-"""Provisioner / autoscaler (Fig. 16): scale the cloud GPU pool with load."""
+"""Provisioner / autoscaler (Fig. 16): scale the cloud GPU pool with load.
+
+The decision is unit-agnostic: ``decide`` maps (queue backlog, current
+capacity) -> new capacity.  The ``Router`` applies it either to a replica's
+simulated *device* pool (``scale_unit="devices"``) or to the number of
+whole executor *replicas* in its pool (``scale_unit="replicas"`` — the
+cloud ML server's autoscaled replica pool that batches are sharded
+across).  ``unit`` only labels the trace for monitoring."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -12,6 +19,7 @@ class Autoscaler:
     target_queue_per_device: float = 2.0
     scale_down_queue: float = 0.5
     cooldown_s: float = 2.0
+    unit: str = "devices"         # "devices" | "replicas" (trace label)
 
     _last_change: float = -1e9
     history: List[Dict[str, float]] = field(default_factory=list)
@@ -37,8 +45,9 @@ class Autoscaler:
         """Aggregate view of the scaling trace (for benchmarks/monitoring)."""
         if not self.history:
             return {"decisions": 0, "peak_queue": 0, "peak_devices": 0,
-                    "scale_ups": 0, "scale_downs": 0}
+                    "scale_ups": 0, "scale_downs": 0, "unit": self.unit}
         return {
+            "unit": self.unit,
             "decisions": len(self.history),
             "peak_queue": max(h["queue"] for h in self.history),
             "peak_devices": max(h["new_devices"] for h in self.history),

@@ -46,7 +46,10 @@ class DynamicBatcher:
         for b in self.pad_to_buckets:
             if n <= b:
                 return b
-        return self.pad_to_buckets[-1]
+        # beyond the largest bucket the batch runs at its exact size: padding
+        # down to the last bucket would truncate, and counting it made the
+        # `padded` stat go negative
+        return n
 
     def take_batch(self, now: float) -> List[QueuedRequest]:
         batch = self._queue[: self.max_batch]
@@ -54,7 +57,7 @@ class DynamicBatcher:
         b = self.bucket(len(batch))
         self.stats["batches"] += 1
         self.stats["requests"] += len(batch)
-        self.stats["padded"] += b - len(batch)
+        self.stats["padded"] += max(0, b - len(batch))
         return batch
 
     def __len__(self) -> int:
@@ -66,11 +69,24 @@ class DynamicBatcher:
 # ---------------------------------------------------------------------------
 @dataclass(eq=False)           # identity equality: payloads are arrays
 class DetectRequest:
-    """One chunk's detector invocation, queued for cross-stream batching."""
+    """One chunk's detector invocation, queued for cross-stream batching.
+
+    ``deadline`` is the absolute simulated time by which the *detector* stage
+    should complete for this chunk's end-to-end SLO to remain attainable
+    (the scheduler derives it from the stream's SLO minus the estimated
+    downstream classify/transfer time).  ``weight`` is the stream's fair-
+    queueing weight; ``not_before`` gates re-queued requests (a replica
+    failure is only *detected* at the failure time, so the retry must not be
+    dispatched earlier on the simulated clock)."""
     frames: Any                  # (F, H, W, 3) low-quality frames
     arrival: float               # simulated arrival time at the cloud
     stream: Any = None           # opaque owner handle (scheduler state)
     meta: Dict[str, Any] = field(default_factory=dict)
+    deadline: Optional[float] = None   # absolute detect-complete deadline
+    weight: float = 1.0                # WFQ weight (higher = more service)
+    not_before: Optional[float] = None # earliest dispatch (requeue gate)
+    vft: Optional[float] = None        # WFQ virtual finish time (set once)
+    seq: int = -1                      # submit order (deterministic ties)
 
 
 @dataclass
@@ -79,50 +95,110 @@ class CrossStreamBatcher:
     their frames into one padded batch for a single jit'd detector call
     (Tangram-style SLO-aware batching of serverless video invocations).
 
-    Flush when ``max_chunks`` requests are pending or the oldest has waited
-    ``window`` seconds (simulated clock).  ``window=0`` degenerates to
-    immediate per-chunk dispatch — the sequential single-stream path."""
+    Flush policy:
+
+    * a full batch (``max_chunks`` arrived requests) always flushes;
+    * requests without a deadline flush when the oldest has waited
+      ``window`` seconds (the fixed-window policy);
+    * requests carrying a ``deadline`` flush **deadline-driven**: the batch
+      is held open only while the tightest pending deadline can still be
+      met given the estimated batch service time (``service_model``), i.e.
+      it flushes at ``min(deadline) - est_service(pending_frames)``.
+
+    Batch-assembly order is weighted fair queueing: each request gets a
+    virtual finish time ``vft = max(vclock, last_vft(stream)) + frames/weight``
+    at submit, and ``take`` drains in vft order — so when the batch is full,
+    a high-weight camera's chunks preempt backlog from bulk streams.
+
+    ``window=0`` with no deadlines degenerates to immediate per-chunk
+    dispatch — the bit-identical sequential single-stream path."""
     max_chunks: int = 8
     window: float = 0.0
     pad_buckets: Tuple[int, ...] = (2, 4, 8, 16, 32, 64)
+    # frames -> estimated detector service seconds (e.g. profile.detect_time)
+    service_model: Optional[Callable[[int], float]] = None
 
     _queue: List[DetectRequest] = field(default_factory=list)
+    _vclock: float = 0.0
+    _vft: Dict[int, float] = field(default_factory=dict)
+    _seq: int = 0
     stats: Dict[str, float] = field(default_factory=lambda: {
         "batches": 0, "chunks": 0, "frames": 0, "padded_frames": 0,
-        "max_batch_chunks": 0})
+        "max_batch_chunks": 0, "deadline_flushes": 0, "requeued": 0})
 
     def submit(self, req: DetectRequest) -> None:
+        if req.seq < 0:
+            req.seq = self._seq
+            self._seq += 1
+        if req.vft is None:
+            # WFQ virtual finish time; keyed per stream so a stream's own
+            # requests stay FIFO while streams interleave by weight
+            key = id(req.stream) if req.stream is not None else -req.seq
+            w = max(float(req.weight), 1e-6)
+            start = max(self._vclock, self._vft.get(key, 0.0))
+            req.vft = start + req.frames.shape[0] / w
+            self._vft[key] = req.vft
+        else:
+            # requeue after a replica failure: keep the original arrival and
+            # fair-queueing position, just count it
+            self.stats["requeued"] += 1
         self._queue.append(req)
 
     def _arrived(self, now: float) -> List[DetectRequest]:
-        # only requests whose (simulated) upload has completed are eligible
-        return [r for r in self._queue if r.arrival <= now + 1e-12]
+        # only requests whose (simulated) upload has completed — and whose
+        # requeue gate has passed — are eligible
+        return [r for r in self._queue if r.arrival <= now + 1e-12
+                and (r.not_before is None or r.not_before <= now + 1e-12)]
+
+    @staticmethod
+    def _order(r: DetectRequest) -> Tuple[float, float, int]:
+        return (r.vft if r.vft is not None else 0.0, r.arrival, r.seq)
+
+    def _est_service(self, reqs: List[DetectRequest]) -> float:
+        if self.service_model is None:
+            return 0.0
+        head = sorted(reqs, key=self._order)[: self.max_chunks]
+        return self.service_model(sum(r.frames.shape[0] for r in head))
+
+    def _flush_by(self, r: DetectRequest, est: float) -> float:
+        """Latest simulated time this request allows the batch to stay open."""
+        earliest = max(r.arrival, r.not_before or r.arrival)
+        if r.deadline is None:
+            return earliest + self.window
+        return max(earliest, r.deadline - est)
 
     def ready(self, now: float) -> bool:
         arrived = self._arrived(now)
         if not arrived:
             return False
-        oldest = min(r.arrival for r in arrived)
-        # small tolerance: the flush event fires at exactly oldest + window,
-        # and float summation must not leave the batch stranded
-        return (len(arrived) >= self.max_chunks
-                or now - oldest >= self.window - 1e-9)
+        if len(arrived) >= self.max_chunks:
+            return True
+        est = self._est_service(arrived)
+        # small tolerance: the flush event fires at exactly the flush-by
+        # time, and float summation must not leave the batch stranded
+        return now >= min(self._flush_by(r, est) for r in arrived) - 1e-9
 
     def next_deadline(self) -> Optional[float]:
+        """Earliest time any queued request forces a flush (event horizon)."""
         if not self._queue:
             return None
-        return min(r.arrival for r in self._queue) + self.window
+        est = self._est_service(self._queue)
+        return min(self._flush_by(r, est) for r in self._queue)
 
     def take(self, now: float) -> List[DetectRequest]:
-        batch = sorted(self._arrived(now),
-                       key=lambda r: r.arrival)[: self.max_chunks]
+        batch = sorted(self._arrived(now), key=self._order)[: self.max_chunks]
         for r in batch:
             self._queue.remove(r)
+        if batch:
+            self._vclock = max(self._vclock,
+                               min(r.vft for r in batch if r.vft is not None))
         self.stats["batches"] += 1
         self.stats["chunks"] += len(batch)
         self.stats["frames"] += sum(r.frames.shape[0] for r in batch)
         self.stats["max_batch_chunks"] = max(self.stats["max_batch_chunks"],
                                              len(batch))
+        if any(r.deadline is not None for r in batch):
+            self.stats["deadline_flushes"] += 1
         return batch
 
     @property

@@ -1,9 +1,19 @@
 """Fault tolerance (Fig. 15): detect cloud disconnection, fail over to the
-fog-local backup detector (YOLOv3 role), resume when the cloud recovers."""
+fog-local backup detector (YOLOv3 role), resume when the cloud recovers.
+
+Two failure domains are modelled:
+
+* **WAN outage** (the original Fig. 15 path): the whole cloud link drops;
+  heartbeats detect it and chunks run on the fog fallback detector.
+* **Replica outage** (multi-replica serving plane): one detector replica in
+  the cloud pool dies mid-run.  The graph scheduler consults
+  ``replica_down`` / ``replica_fail_time`` before and during each sub-batch
+  dispatch; a failed replica's sub-batch is re-queued to surviving replicas
+  (or the fog fallback when none survive) with no chunk result lost."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core.bandwidth import NetworkModel
 
@@ -17,6 +27,29 @@ class FaultTolerantCoordinator:
     missed: int = 0
     mode: str = "cloud"             # "cloud" | "fog-fallback"
     events: List[dict] = field(default_factory=list)
+    # replica uid -> simulated time at which it permanently fails.  Keyed
+    # by the router's *stable* replica uid (initial replicas: uid == pool
+    # index), never by pool position — autoscaling shifts positions, and a
+    # scheduled outage must not migrate onto a later replica
+    replica_fail_at: Dict[int, float] = field(default_factory=dict)
+
+    # -- replica failure domain ------------------------------------------
+    def fail_replica(self, uid: int, at: float = 0.0) -> None:
+        """Schedule the replica with ``uid`` to die at simulated ``at``."""
+        self.replica_fail_at[uid] = at
+
+    def replica_fail_time(self, uid: int) -> Optional[float]:
+        return self.replica_fail_at.get(uid)
+
+    def replica_down(self, uid: int, now: float) -> bool:
+        t = self.replica_fail_at.get(uid)
+        return t is not None and now >= t
+
+    def note_replica_failure(self, uid: int, now: float,
+                             requeued: int = 0) -> None:
+        """Record a detected replica outage (called by the scheduler)."""
+        self.events.append({"t": now, "event": "replica_failover",
+                            "replica": uid, "requeued_chunks": requeued})
 
     def heartbeat(self, now: float) -> str:
         """Poll the cloud link; returns the current serving mode."""

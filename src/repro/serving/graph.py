@@ -16,9 +16,19 @@ Execution is **event-driven**: a priority queue of per-stream events
 (ingest -> flush -> finalize) replaces the old coordinator's scalar clock,
 so N camera streams advance concurrently on one simulated timeline.  The
 cloud-detector stage runs through a :class:`CrossStreamBatcher` that packs
-frames from concurrent chunks into a single padded jit'd call (Tangram-style
+frames from concurrent chunks into padded jit'd calls (Tangram-style
 batched serverless inference) and feeds the *real* queue depth to the
 autoscaler on every dispatch.
+
+The serving plane is **SLO-aware and multi-replica**: streams carry a
+per-chunk latency SLO (deadline-driven flush — the batch is held open only
+while the tightest pending deadline can still be met given the estimated
+service time) and a fair-queueing weight (WFQ batch-assembly order), each
+flush is sharded into frame-balanced sub-batches routed concurrently
+across the :class:`~repro.serving.router.Router`'s health-checked detector
+replicas, the autoscaler can add/remove whole replicas
+(``scale_unit="replicas"``), and a replica that dies mid-run has its
+sub-batch re-queued to survivors (or the fog fallback) with no chunk lost.
 
 With one stream and a zero batching window the event order degenerates to
 the strict sequential path, and because the same jit'd stage functions are
@@ -125,12 +135,19 @@ class VideoFunctionGraph:
 # ---------------------------------------------------------------------------
 @dataclass
 class StreamState:
-    """One camera stream: its fog node, model cache, and HITL state."""
+    """One camera stream: its fog node, model cache, and HITL state.
+
+    ``slo`` is the stream's end-to-end per-chunk latency target (seconds,
+    simulated; None = best-effort), and ``weight`` its fair-queueing weight —
+    a high-weight camera's chunks preempt backlog from bulk streams in the
+    cross-stream batcher."""
     name: str
     W: np.ndarray
     fog_exec: Executor
     learner: Any = None
     annotator: Any = None
+    slo: Optional[float] = None
+    weight: float = 1.0
     clock: float = 0.0
     busy: bool = False
     pending: Deque[Tuple[Any, bool]] = field(default_factory=deque)
@@ -152,7 +169,9 @@ class GraphScheduler:
                  network: Optional[NetworkModel] = None,
                  monitor: Optional[Monitor] = None,
                  batcher: Optional[CrossStreamBatcher] = None,
-                 cloud_devices: int = 1, autoscaler=None,
+                 cloud_devices: int = 1, cloud_replicas: int = 1,
+                 autoscaler=None, scale_unit: str = "devices",
+                 deadline_batching: bool = True, slo_margin: float = 0.1,
                  fault=None, fallback_fn: Optional[Callable] = None):
         proto = graph.protocol
         self.graph = graph
@@ -161,28 +180,56 @@ class GraphScheduler:
         # explicit None check: an empty batcher is falsy (it has __len__)
         self.batcher = (batcher if batcher is not None
                         else CrossStreamBatcher(max_chunks=1, window=0.0))
-        self.cloud_executor = Executor("cloud", graph.registry, proto.cloud,
-                                       num_devices=cloud_devices)
-        self.router = Router([self.cloud_executor], monitor=self.monitor,
-                             autoscaler=autoscaler)
+        if self.batcher.service_model is None:
+            # deadline-driven flush needs an estimate of batch service time
+            self.batcher.service_model = proto.cloud.detect_time
+
+        def _make_replica(i: int) -> Executor:
+            return Executor("cloud" if i == 0 else f"cloud-{i}",
+                            graph.registry, proto.cloud,
+                            num_devices=cloud_devices)
+
+        replicas = [_make_replica(i) for i in range(max(1, cloud_replicas))]
+        self.cloud_executor = replicas[0]       # primary (never retired)
+        self.router = Router(replicas, monitor=self.monitor,
+                             autoscaler=autoscaler, scale_unit=scale_unit,
+                             replica_factory=_make_replica)
         self.autoscaler = autoscaler
+        self.deadline_batching = deadline_batching
+        # headroom fraction of the SLO held back when deriving the detect
+        # deadline: estimates (service time, downstream work, device wait)
+        # carry error, and a batch held open to the exact deadline misses
+        # on any slip
+        self.slo_margin = slo_margin
         self.fault = fault
         self.fallback_fn = fallback_fn
+        # estimate of the post-detect work (coords download + fog classify)
+        # a chunk still faces; the detect deadline is the stream SLO minus
+        # this.  Tracked as a fast-up/slow-down EWMA of observed values so
+        # the flush policy stays conservative: under-holding a batch only
+        # costs batching efficiency, over-holding misses the SLO.
+        self._downstream_est = (self.network.wan_time(0.0)
+                                + proto.fog.classify_time(8))
         self.streams: Dict[str, StreamState] = {}
         self._events: List[Tuple[float, int, str, dict]] = []
         self._seq = itertools.count()
         # wall-clock accounting for the jit'd detect stage (throughput lever)
         self.detect_stats = {"calls": 0, "frames": 0, "padded_frames": 0,
                              "wall_s": 0.0}
+        # (start, service) of every detect dispatch, held here because a
+        # replica retired by scale-down takes its ExecutionRecords with it
+        self._detect_windows: List[Tuple[float, float]] = []
 
     # ------------------------------------------------------------------
-    def add_stream(self, name: str, *, W, learner=None,
-                   annotator=None) -> StreamState:
+    def add_stream(self, name: str, *, W, learner=None, annotator=None,
+                   slo: Optional[float] = None,
+                   weight: float = 1.0) -> StreamState:
         fog_exec = Executor(f"fog-{name}", self.graph.registry,
                             self.graph.protocol.fog)
         st = StreamState(name=name, W=np.asarray(W), fog_exec=fog_exec,
                          learner=learner,
-                         annotator=annotator or OracleAnnotator())
+                         annotator=annotator or OracleAnnotator(),
+                         slo=slo, weight=weight)
         self.streams[name] = st
         return st
 
@@ -241,36 +288,118 @@ class GraphScheduler:
                                      model_time=qc)
         wan_up = self.network.wan_time(float(enc.nbytes))
         arrival = t + qc + wan_up
-        self.batcher.submit(DetectRequest(
+        req = DetectRequest(
             frames=np.asarray(enc.frames), arrival=arrival, stream=stream,
+            weight=stream.weight,
             meta=dict(chunk=chunk, learn=learn, t0=t, qc=qc, wan_up=wan_up,
-                      wan_bytes=float(enc.nbytes))))
+                      wan_bytes=float(enc.nbytes)))
+        if stream.slo is not None and self.deadline_batching:
+            req.deadline = (t + stream.slo * (1.0 - self.slo_margin)
+                            - self._downstream_est)
+        self.batcher.submit(req)
         self._push(arrival, "flush", {})
-        if self.batcher.window > 0:
-            self._push(arrival + self.batcher.window, "flush", {})
+        nd = self.batcher.next_deadline()
+        if nd is not None and nd > arrival + 1e-12:
+            self._push(nd, "flush", {})
 
     def _flush(self, t: float) -> None:
         while self.batcher.ready(t):
             self._run_batch(t, self.batcher.take(t))
+        if len(self.batcher):
+            # deadline-driven flushes move earlier as the queue grows (the
+            # estimated service time rises); keep an event at the horizon
+            nd = self.batcher.next_deadline()
+            if nd is not None and nd > t + 1e-12:
+                self._push(nd, "flush", {})
 
+    # ------------------------------------------------------------------
     def _run_batch(self, t: float, reqs: List[DetectRequest]) -> None:
+        """Shard one flush across healthy replicas and dispatch each shard.
+
+        With one replica (or one request) the flush runs as a single batch —
+        the bit-identical single-stream path.  With R healthy replicas the
+        chunks are partitioned into ≤R frame-balanced sub-batches, each
+        routed to its own replica, so they run concurrently on the
+        simulated clock (the cloud ML server's load-balanced replica pool)."""
+        if not reqs:
+            return
+        k = min(self.router.healthy_count(), len(reqs))
+        if k <= 1:
+            groups = [reqs]
+        else:
+            groups = [[] for _ in range(k)]
+            loads = [0] * k
+            for r in reqs:            # greedy, preserves WFQ order in-group
+                j = min(range(k), key=lambda i: (loads[i], i))
+                groups[j].append(r)
+                loads[j] += r.frames.shape[0]
+        for g in groups:
+            self._dispatch(t, g)
+
+    def _fallback_batch(self, t: float, reqs: List[DetectRequest]) -> None:
+        """No healthy replica survives: run each chunk on the fog detector."""
+        if self.fallback_fn is None:
+            raise RuntimeError("no healthy replicas and no fog fallback")
+        for req in reqs:
+            chunk = req.meta["chunk"]
+            res = self.fallback_fn(chunk.frames)
+            self._push(t + res.latency.total, "finalize",
+                       dict(stream=req.stream, chunk=chunk, res=res,
+                            mode="fog-fallback", learn=req.meta["learn"],
+                            t0=req.meta["t0"]))
+
+    def _dispatch(self, t: float, reqs: List[DetectRequest]) -> None:
         proto = self.graph.protocol
+        # pick a replica; health-check it against the fault schedule first
+        # (the schedule is keyed by the replica's stable uid, not its pool
+        # position — positions shift when the autoscaler resizes the pool)
+        while True:
+            idx = self.router.pick()
+            if idx is None:
+                self._fallback_batch(t, reqs)
+                return
+            uid = self.router.replicas[idx].uid
+            if self.fault is not None and self.fault.replica_down(uid, t):
+                self.router.mark_unhealthy(idx)
+                self.fault.note_replica_failure(uid, t, requeued=0)
+                continue
+            break
         batch, slices, pad = pack_frames([r.frames for r in reqs],
                                          buckets=self.batcher.pad_buckets)
         n_frames = batch.shape[0]
         svc = proto.cloud.detect_time(n_frames)
+        rep = self.router.replicas[idx]
+        fail_t = (self.fault.replica_fail_time(uid)
+                  if self.fault is not None else None)
+        if fail_t is not None:
+            est_start = max(t, min(rep.executor.busy_until))
+            if fail_t < est_start + svc:
+                # the replica dies while this sub-batch is in service: its
+                # work is lost, the outage is detected at the failure time,
+                # and the chunks re-queue to surviving replicas (arrival and
+                # fair-queueing position preserved — nothing is dropped)
+                self.router.mark_unhealthy(idx)
+                self.fault.note_replica_failure(uid, fail_t,
+                                                requeued=len(reqs))
+                for r in reqs:
+                    r.not_before = fail_t
+                    self.batcher.submit(r)
+                self._push(fail_t, "flush", {})
+                return
         # real queue depth (frames still waiting / in flight to the cloud)
         queue_depth = self.batcher.pending_frames
         w0 = time.perf_counter()
         det, done, _ = self.router.route(STAGE_DETECT, jnp.asarray(batch),
                                          now=t, model_time=svc,
-                                         queue_depth=queue_depth)
+                                         queue_depth=queue_depth,
+                                         replica=idx)
         jax.block_until_ready(det)
         self.detect_stats["calls"] += 1
         self.detect_stats["frames"] += n_frames - pad
         self.detect_stats["padded_frames"] += pad
         self.detect_stats["wall_s"] += time.perf_counter() - w0
         start = done - svc
+        self._detect_windows.append((start, svc))
 
         for req, sl in zip(reqs, slices):
             det_i = {k: v[sl] for k, v in det.items()}
@@ -279,6 +408,10 @@ class GraphScheduler:
             wan_down = self.network.wan_time(float(coord_bytes))
             n_crops = int(np.sum(np.asarray(split.prop_valid)))
             clf_time = proto.fog.classify_time(max(n_crops, 1))
+            obs = wan_down + clf_time
+            self._downstream_est = (obs if obs > self._downstream_est
+                                    else 0.9 * self._downstream_est
+                                    + 0.1 * obs)
             stream = req.stream
             chunk = req.meta["chunk"]
             merged, _ = stream.fog_exec.run(
@@ -306,6 +439,11 @@ class GraphScheduler:
         self.monitor.record("latency", res.latency.total, t0)
         self.monitor.record("wan_bytes", res.wan_bytes, t0)
         self.monitor.incr("cloud_frames", res.cloud_frames)
+        if stream.slo is not None:
+            met = res.latency.total <= stream.slo + 1e-9
+            self.monitor.record("slo_attained", 1.0 if met else 0.0, t0)
+            self.monitor.record("slo_margin",
+                                stream.slo - res.latency.total, t0)
         if (data["learn"] and stream.learner is not None
                 and data["mode"] == "cloud"
                 and not stream.learner.budget_exhausted):
@@ -320,11 +458,25 @@ class GraphScheduler:
 
     # ------------------------------------------------------------------
     def throughput_report(self) -> Dict[str, float]:
-        """Wall-clock throughput of the jit'd detect stage + batch stats."""
+        """Wall-clock + simulated throughput of the detect stage, batch
+        stats, replica pool size, and SLO attainment (when SLOs are set)."""
         d = dict(self.detect_stats)
         d["frames_per_s"] = (d["frames"] / d["wall_s"] if d["wall_s"] > 0
                              else 0.0)
         d.update({f"batch_{k}": v for k, v in self.batcher.stats.items()})
+        d["replicas"] = len(self.router.replicas)
+        d["healthy_replicas"] = self.router.healthy_count()
+        # simulated detect-stage makespan across the replica pool: with R
+        # replicas the sub-batches overlap, so frames/span is the serving
+        # plane's *capacity*, unlike frames/wall_s (one-CPU jit time)
+        if self._detect_windows:
+            span = (max(s + dur for s, dur in self._detect_windows)
+                    - min(s for s, _ in self._detect_windows))
+            d["detect_span_s"] = span
+            d["sim_frames_per_s"] = (d["frames"] / span if span > 0 else 0.0)
+        att = self.monitor.values("slo_attained")
+        if att:
+            d["slo_attainment"] = float(np.mean(att))
         if self.autoscaler is not None and self.autoscaler.history:
             s = self.autoscaler.summary()
             d["peak_devices"] = s["peak_devices"]

@@ -1,11 +1,16 @@
 """Request router / load balancer (the cloud ML server's load balancer in
-Fig. 3): routes chunks across executor replicas with health checks and
-least-loaded selection; integrates with the autoscaler."""
+Fig. 3): routes requests across executor replicas with health checks and
+least-loaded selection; integrates with the autoscaler.
+
+Scaling has two units: ``scale_unit="devices"`` grows the picked replica's
+simulated device pool in place (the pre-SLO behaviour), while
+``scale_unit="replicas"`` adds/removes whole executor replicas through
+``replica_factory`` — the cloud ML server's autoscaled replica pool, which
+the graph scheduler shards batches across."""
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.serving.autoscaler import Autoscaler
 from repro.serving.executor import Executor
@@ -15,6 +20,7 @@ from repro.serving.monitor import Monitor
 @dataclass
 class Replica:
     executor: Executor
+    uid: int = 0          # stable identity: pool positions shift on scaling
     healthy: bool = True
     inflight: int = 0
     served: int = 0
@@ -25,10 +31,16 @@ class Router:
 
     def __init__(self, replicas: List[Executor],
                  monitor: Optional[Monitor] = None,
-                 autoscaler: Optional[Autoscaler] = None):
-        self.replicas = [Replica(e) for e in replicas]
+                 autoscaler: Optional[Autoscaler] = None,
+                 scale_unit: str = "devices",
+                 replica_factory: Optional[Callable[[int], Executor]] = None):
+        assert scale_unit in ("devices", "replicas")
+        self.replicas = [Replica(e, uid=i) for i, e in enumerate(replicas)]
+        self._next_uid = len(self.replicas)
         self.monitor = monitor or Monitor()
         self.autoscaler = autoscaler
+        self.scale_unit = scale_unit
+        self.replica_factory = replica_factory
         self._queue: List[Tuple[str, tuple, dict, float]] = []
         self.clock = 0.0
 
@@ -40,28 +52,60 @@ class Router:
     def mark_healthy(self, idx: int) -> None:
         self.replicas[idx].healthy = True
 
-    def _pick(self) -> Optional[int]:
-        healthy = [(r.inflight + len(r.executor.busy_until), i)
-                   for i, r in enumerate(self.replicas) if r.healthy]
-        if not healthy:
-            return None
+    def healthy_count(self) -> int:
+        return sum(r.healthy for r in self.replicas)
+
+    def pick(self) -> Optional[int]:
         # least-loaded: fewest inflight, then earliest-free device
         load = [(r.inflight, min(r.executor.busy_until), i)
                 for i, r in enumerate(self.replicas) if r.healthy]
+        if not load:
+            return None
         return min(load)[2]
+
+    # ------------------------------------------------------------------
+    def scale_replicas(self, target: int) -> None:
+        """Grow/shrink the pool to ``target`` *healthy* replicas
+        (``scale_unit="replicas"``): dead replicas hold no capacity, so
+        they are swept out first and never counted toward the target."""
+        target = max(1, target)
+        for i in range(len(self.replicas) - 1, 0, -1):
+            if (not self.replicas[i].healthy
+                    and self.replicas[i].inflight == 0):
+                self.replicas.pop(i)
+                self.monitor.incr("replicas_removed")
+        while (self.healthy_count() < target
+               and self.replica_factory is not None):
+            uid = self._next_uid
+            self._next_uid += 1
+            self.replicas.append(Replica(self.replica_factory(uid), uid=uid))
+            self.monitor.incr("replicas_added")
+        while self.healthy_count() > target:
+            # retire idle healthy replicas from the tail; replica 0 is the
+            # primary and always survives (schedulers hold a reference)
+            idx = next((i for i in range(len(self.replicas) - 1, 0, -1)
+                        if self.replicas[i].inflight == 0
+                        and self.replicas[i].healthy), None)
+            if idx is None:
+                break
+            self.replicas.pop(idx)
+            self.monitor.incr("replicas_removed")
 
     # ------------------------------------------------------------------
     def route(self, fn_name: str, *args, now: Optional[float] = None,
               model_time: Optional[float] = None,
-              queue_depth: Optional[int] = None, **kw):
+              queue_depth: Optional[int] = None,
+              replica: Optional[int] = None, **kw):
         """Dispatch one request; returns (result, completion_time, replica).
 
         ``queue_depth`` lets callers that maintain a real request queue
         (e.g. the cross-stream graph scheduler) feed the autoscaler the
-        actual backlog instead of the per-replica busy-time heuristic."""
+        actual backlog instead of the per-replica busy-time heuristic.
+        ``replica`` pins the request to a specific replica (the scheduler
+        uses this after its own pick + fault check)."""
         now = self.clock if now is None else now
         self.clock = max(self.clock, now)
-        idx = self._pick()
+        idx = self.pick() if replica is None else replica
         if idx is None:
             raise RuntimeError("no healthy replicas")
         rep = self.replicas[idx]
@@ -83,10 +127,18 @@ class Router:
                 queue = int(backlog / max(unit, 1e-9))
             else:
                 queue = queue_depth
-            target = self.autoscaler.decide(done, queue,
-                                            rep.executor.num_devices)
-            if target != rep.executor.num_devices:
-                rep.executor.scale_to(target)
+            if self.scale_unit == "replicas":
+                # capacity = healthy replicas: a dead one still in the pool
+                # must not be counted as provisioned capacity
+                current = self.healthy_count()
+                target = self.autoscaler.decide(done, queue, current)
+                if target != current:
+                    self.scale_replicas(target)
+            else:
+                target = self.autoscaler.decide(done, queue,
+                                                rep.executor.num_devices)
+                if target != rep.executor.num_devices:
+                    rep.executor.scale_to(target)
         return result, done, idx
 
     def load_report(self) -> Dict[str, float]:
@@ -97,4 +149,5 @@ class Router:
                     (len(shares) * sum(s ** 2 for s in shares))
                     if any(shares) else 1.0)
         return {"served": total, "fairness": fairness,
+                "replicas": len(self.replicas),
                 "healthy": sum(r.healthy for r in self.replicas)}

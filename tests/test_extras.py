@@ -96,6 +96,34 @@ def test_router_no_healthy_raises():
         router.route("detect", 1)
 
 
+def test_router_scale_down_sweeps_dead_replicas_first():
+    """Shrinking the pool must retire dead replicas, never healthy ones in
+    their place, and the autoscaler target counts *healthy* capacity."""
+    router = _make_router(3)
+    router.replica_factory = None
+    router.mark_unhealthy(1)
+    router.scale_replicas(2)
+    assert len(router.replicas) == 2
+    assert router.healthy_count() == 2            # the dead one was swept
+    assert all(r.healthy for r in router.replicas)
+    assert router.replicas[0].uid == 0            # primary survives
+    assert router.replicas[1].uid == 2            # survivor keeps its uid
+
+
+def test_router_scale_up_assigns_fresh_uids():
+    reg = FunctionRegistry()
+    reg.register("detect", lambda x: x * 2)
+    router = _make_router(2)
+    router.replica_factory = lambda uid: Executor(f"cloud-{uid}", reg, CLOUD)
+    router.mark_unhealthy(1)
+    router.scale_replicas(3)                      # 1 healthy -> 3 healthy
+    assert router.healthy_count() == 3
+    # retired uid 1 is never reissued: outage schedules keyed by uid can't
+    # migrate onto a replacement replica
+    uids = [r.uid for r in router.replicas]
+    assert 1 not in uids and len(set(uids)) == len(uids)
+
+
 def test_router_with_autoscaler():
     scaler = Autoscaler(min_devices=1, max_devices=4, cooldown_s=0.0)
     router = _make_router(1, autoscaler=scaler)

@@ -52,6 +52,27 @@ def test_dynamic_batcher_flush_rules():
     assert len(b.take_batch(now=1.0)) == 4
 
 
+def test_dynamic_batcher_overflow_bucket_stats():
+    """A batch larger than the largest pad bucket runs at its exact size:
+    bucket() must not round *down* (which truncated the count and drove the
+    `padded` stat negative)."""
+    b = DynamicBatcher(max_batch=40, pad_to_buckets=(1, 2, 4, 8, 16))
+    assert b.bucket(16) == 16
+    assert b.bucket(17) == 17             # past the largest bucket: exact
+    assert b.bucket(3) == 4
+    for i in range(20):
+        b.submit(i, now=0.0)
+    batch = b.take_batch(now=0.0)
+    assert len(batch) == 20
+    assert b.stats["padded"] == 0         # was 16 - 20 = -4 before the fix
+    # a padded batch still counts padding correctly
+    for i in range(5):
+        b.submit(i, now=1.0)
+    b.take_batch(now=1.0)
+    assert b.stats["padded"] == 3         # 5 -> bucket 8
+    assert b.stats["requests"] == 25
+
+
 def test_batch_crops_padding():
     crops = np.random.rand(2, 8, 4, 4, 3).astype(np.float32)
     valid = np.zeros((2, 8), bool)
