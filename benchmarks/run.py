@@ -26,6 +26,7 @@ BENCHES = [
     ("fig16_autoscale", "benchmarks.bench_autoscale"),
     ("multistream", "benchmarks.bench_multistream"),
     ("slo_serving", "benchmarks.bench_slo_serving"),
+    ("drift_recovery", "benchmarks.bench_drift_recovery"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline_table"),
 ]

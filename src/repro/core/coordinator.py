@@ -83,7 +83,8 @@ class CloudFogCoordinator:
                  *, fallback_params=None, fallback_cfg=None,
                  learner: IncrementalLearner = None,
                  annotator: OracleAnnotator = None,
-                 network: NetworkModel = None, monitor: Monitor = None):
+                 network: NetworkModel = None, monitor: Monitor = None,
+                 learning_plane=None):
         self.protocol = protocol
         self.det_params = det_params
         self.clf_params = clf_params
@@ -99,6 +100,9 @@ class CloudFogCoordinator:
             self.graph, network=self.network, monitor=self.monitor,
             batcher=CrossStreamBatcher(max_chunks=1, window=0.0),
             fault=self.fault, fallback_fn=self._fog_fallback)
+        self.plane = learning_plane
+        if learning_plane is not None:
+            learning_plane.attach(self.scheduler)
         self._stream = self.scheduler.add_stream(
             "cam0", W=np.asarray(clf_params["W"]), learner=learner,
             annotator=self.annotator)
@@ -189,8 +193,11 @@ class MultiStreamCoordinator:
                  batch_window: float = 0.02, cloud_devices: int = 1,
                  cloud_replicas: int = 1, slo: Optional[float] = None,
                  deadline_batching: bool = True,
+                 adaptive_margin: bool = True,
+                 cold_start_s: float = 0.0,
                  scale_unit: Optional[str] = None,
-                 autoscaler=None, fault: FaultTolerantCoordinator = None):
+                 autoscaler=None, fault: FaultTolerantCoordinator = None,
+                 learning_plane=None):
         self.protocol = protocol
         self.clf_params = clf_params
         self.fallback_params = fallback_params
@@ -209,7 +216,12 @@ class MultiStreamCoordinator:
             cloud_devices=cloud_devices, cloud_replicas=cloud_replicas,
             autoscaler=autoscaler, scale_unit=scale_unit,
             deadline_batching=deadline_batching,
+            adaptive_margin=adaptive_margin, cold_start_s=cold_start_s,
             fault=fault, fallback_fn=self._fog_fallback)
+        self.plane = learning_plane
+        if learning_plane is not None:
+            # the continual-learning plane replaces per-stream inline HITL
+            learning_plane.attach(self.scheduler)
         self.specs: List[StreamSpec] = []
         self._states: List[StreamState] = []
         for i, s in enumerate(streams):
@@ -260,4 +272,7 @@ class MultiStreamCoordinator:
 
     def report(self) -> Dict[str, float]:
         """Cross-stream batching + detect-stage throughput + scaling stats."""
-        return self.scheduler.throughput_report()
+        rep = self.scheduler.throughput_report()
+        if self.plane is not None:
+            rep["learning"] = self.plane.summary()
+        return rep

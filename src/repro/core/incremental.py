@@ -95,6 +95,32 @@ def ensemble_predict(snapshots: jax.Array, omega: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Evaluation helpers (shadow evaluator / promotion gate)
+# ---------------------------------------------------------------------------
+def eval_accuracy(W, xs, labels) -> float:
+    """Top-1 accuracy of the one-vs-all readout W on labelled features.
+
+    sigmoid is monotone, so argmax over logits equals argmax over the
+    per-head probabilities the serving path uses."""
+    xs = jnp.asarray(xs)
+    labels = jnp.asarray(labels)
+    if xs.shape[0] == 0:
+        return 0.0
+    pred = jnp.argmax(xs @ jnp.asarray(W), axis=-1)
+    return float(jnp.mean((pred == labels).astype(jnp.float32)))
+
+
+def ensemble_accuracy(snapshots, omega, xs, labels) -> float:
+    """Top-1 accuracy of the Eq. (9) snapshot ensemble."""
+    xs = jnp.asarray(xs)
+    if xs.shape[0] == 0:
+        return 0.0
+    preds = ensemble_predict(jnp.asarray(snapshots), jnp.asarray(omega), xs)
+    return float(jnp.mean((jnp.argmax(preds, -1)
+                           == jnp.asarray(labels)).astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
 # The stateful learner used by the platform's auto-training backend
 # ---------------------------------------------------------------------------
 @dataclass

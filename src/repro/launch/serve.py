@@ -16,6 +16,13 @@ batching, detector replica sharding, weighted-fair stream priorities):
 
   PYTHONPATH=src python -m repro.launch.serve --video-streams 8 \\
       --video-replicas 2 --video-slo 0.4 --video-weights 4,1
+
+Continual-learning plane (drift is injected into the second half of each
+stream; the plane detects it, labels under --label-budget, trains in the
+background, and hot-swaps promoted fog models mid-run):
+
+  PYTHONPATH=src python -m repro.launch.serve --video-streams 4 \\
+      --video-chunks 6 --learning --label-budget 256 --drift-window 8
 """
 from __future__ import annotations
 
@@ -69,10 +76,42 @@ def serve_video(args) -> None:
 
     det_params = det_mod.init_detector(DETECTOR, jax.random.PRNGKey(0))
     clf_params = clf_mod.init_classifier(CLASSIFIER, jax.random.PRNGKey(1))
-    streams = [[synthetic.make_chunk(np.random.default_rng(50 + i),
-                                     "traffic", num_frames=args.video_frames)
-                for _ in range(args.video_chunks)]
-               for i in range(args.video_streams)]
+    if args.learning:
+        # drift detection watches oracle-verified accuracy, so it needs a
+        # *trained* classifier; reuse the benchmark artifacts when present
+        import os
+
+        from repro.models import schema as sch
+        from repro.training import checkpoint
+        art = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "artifacts")
+        try:
+            det_params = checkpoint.restore(
+                os.path.join(art, "det_params"),
+                sch.abstract(det_mod.detector_schema(DETECTOR)))
+            clf_params = checkpoint.restore(
+                os.path.join(art, "clf_params"),
+                sch.abstract(clf_mod.classifier_schema(CLASSIFIER)))
+        except (FileNotFoundError, KeyError, ValueError):
+            print("note: no trained artifacts/ found — with random-init "
+                  "weights the drift statistic carries no signal, so the "
+                  "plane will stay in monitor state (run benchmarks first "
+                  "to train, or see benchmarks/bench_drift_recovery.py)")
+
+        # continual-learning demo: the second half of each stream drifts
+        def _chunk(rng, j):
+            drift = 1.0 if j >= args.video_chunks // 2 else 0.0
+            return synthetic.drifted_chunk(rng, "traffic", drift=drift,
+                                           num_frames=args.video_frames)
+        streams = [[_chunk(np.random.default_rng(50 + i + 97 * j), j)
+                    for j in range(args.video_chunks)]
+                   for i in range(args.video_streams)]
+    else:
+        streams = [[synthetic.make_chunk(np.random.default_rng(50 + i),
+                                         "traffic",
+                                         num_frames=args.video_frames)
+                    for _ in range(args.video_chunks)]
+                   for i in range(args.video_streams)]
 
     weights = [1.0] * args.video_streams
     if args.video_weights:
@@ -86,13 +125,27 @@ def serve_video(args) -> None:
     scaler = Autoscaler(min_devices=1, max_devices=8, cooldown_s=0.5,
                         unit="replicas" if args.video_replicas > 1
                         else "devices")
+    plane = None
+    if args.learning:
+        from repro.learning import (ContinualLearningPlane, DriftConfig,
+                                    LearningConfig)
+        # warmup and the EWMA span must fit inside the per-stream chunk
+        # count, and short demos can't afford multi-observation patience
+        pre = max(1, args.video_chunks // 2)
+        plane = ContinualLearningPlane(CLASSIFIER.num_classes, LearningConfig(
+            label_budget=args.label_budget, sentinel_per_chunk=2,
+            labels_per_round=16, min_batch=8, min_holdout=4,
+            drift=DriftConfig(window=min(args.drift_window, max(2, pre)),
+                              warmup=max(2, pre // 2), patience=1,
+                              threshold=0.4, cooldown=4)))
     multi = MultiStreamCoordinator(
         HighLowProtocol(DETECTOR, CLASSIFIER), det_params, clf_params,
         specs, max_batch_chunks=args.video_streams,
         batch_window=args.video_window,
-        cloud_replicas=args.video_replicas, autoscaler=scaler)
+        cloud_replicas=args.video_replicas, autoscaler=scaler,
+        cold_start_s=args.video_cold_start, learning_plane=plane)
     t0 = time.time()
-    out = multi.run(learn=False)
+    out = multi.run(learn=args.learning)
     dt = time.time() - t0
     rep = multi.report()
     total_chunks = sum(len(s) for s in streams)
@@ -112,6 +165,14 @@ def serve_video(args) -> None:
         print(f"  SLO {args.video_slo*1e3:.0f} ms: attainment "
               f"{rep.get('slo_attainment', 0.0):.2f}, p99 latency "
               f"{mon.percentile('latency', 99)*1e3:.0f} ms")
+    if plane is not None:
+        s = plane.summary()
+        print(f"  learning plane [{s['state']}]: {s['drift_events']} drift "
+              f"event(s), {s['labels_charged']}/{s['label_budget']} labels, "
+              f"{s['trainer'].get('rounds', 0)} train round(s), "
+              f"{s['promotions']} promotion(s), {s['rollbacks']} "
+              f"rollback(s), {s['hot_swaps']} hot-swap(s), live model "
+              f"v{s['live_version']}")
     for name, r in list(out.items())[:3]:
         print(f"  {name}: wan {r.bandwidth/1e3:.1f} kB, cost "
               f"{r.cloud_cost:.0f}, mean latency "
@@ -143,6 +204,18 @@ def main() -> None:
                          "(e.g. 4,1,1 — cam0 gets 4x detector service)")
     ap.add_argument("--video-window", type=float, default=0.05,
                     help="fixed batching window for streams without an SLO")
+    ap.add_argument("--video-cold-start", type=float, default=0.0,
+                    help="serverless container spin-up seconds for replicas "
+                         "added by the autoscaler")
+    ap.add_argument("--learning", action="store_true",
+                    help="attach the continual-learning plane (drift "
+                         "detection, budgeted labeling, background "
+                         "training, fog-model hot-swap) and inject drift "
+                         "into the second half of each stream")
+    ap.add_argument("--label-budget", type=int, default=256,
+                    help="human labor budget tau for the learning plane")
+    ap.add_argument("--drift-window", type=int, default=8,
+                    help="EWMA span (observations) of the drift detector")
     args = ap.parse_args()
 
     if args.video_streams > 0:

@@ -1,0 +1,22 @@
+"""Continual-learning plane (§V online): drift detection, budgeted HITL
+labeling, background incremental training, shadow evaluation, and
+zero-downtime fog-model hot-swap.
+
+The serving plane (``repro.serving.graph``) executes chunks; this package
+runs *beside* it, closing the paper's human-feedback loop online:
+
+  drift -> label (budget tau, most-uncertain-first) -> train (Eq. 8/4)
+        -> shadow-eval vs holdout replay -> promote / rollback -> hot-swap
+"""
+from repro.learning.drift import DriftConfig, DriftDetector, DriftEvent
+from repro.learning.labeling import LabelCandidate, LabelingQueue
+from repro.learning.plane import ContinualLearningPlane, LearningConfig
+from repro.learning.promotion import (PromotionGate, ReplayBuffer,
+                                      ShadowEvaluator)
+from repro.learning.trainer import BackgroundTrainer
+
+__all__ = [
+    "BackgroundTrainer", "ContinualLearningPlane", "DriftConfig",
+    "DriftDetector", "DriftEvent", "LabelCandidate", "LabelingQueue",
+    "LearningConfig", "PromotionGate", "ReplayBuffer", "ShadowEvaluator",
+]

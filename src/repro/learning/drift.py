@@ -1,0 +1,123 @@
+"""Online drift detection over per-stream cascade statistics.
+
+The fog classifier's confidence is the cascade's health signal: §V data
+drift (object appearances change) leaves the cloud detector's localization
+intact but collapses the one-vs-all readout, so the mean fog confidence on
+uncertain regions — and the fog/cloud agreement rate — drop well before
+accuracy numbers are available.  The detector keeps, per stream,
+
+  * a **baseline** established over the first ``warmup`` chunks (and
+    re-anchored by ``rebaseline`` after a successful model promotion),
+  * an **EWMA** of the observed statistic,
+
+and raises a :class:`DriftEvent` when the EWMA stays below
+``baseline * (1 - threshold)`` for ``patience`` consecutive observations.
+Events are **debounced**: after an event fires, no new event can fire for
+``cooldown`` observations on that stream, so a noisy-but-drifted stream
+raises one event per drift episode instead of one per chunk.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class DriftConfig:
+    window: int = 8          # EWMA span (alpha = 2 / (window + 1))
+    warmup: int = 4          # observations used to fix the baseline
+    threshold: float = 0.15  # relative drop vs baseline that counts as drift
+    patience: int = 2        # consecutive below-threshold obs before firing
+    cooldown: int = 6        # observations an event suppresses further events
+
+    @property
+    def alpha(self) -> float:
+        return 2.0 / (self.window + 1.0)
+
+
+@dataclass
+class DriftEvent:
+    stream: str
+    t: float                 # simulated time of the triggering observation
+    stat: float              # EWMA at trigger
+    baseline: float
+    severity: float          # relative drop (1 - stat / baseline)
+    onset_t: float = 0.0     # first below-threshold observation this episode
+
+
+@dataclass
+class _StreamDrift:
+    count: int = 0
+    baseline_sum: float = 0.0
+    baseline: Optional[float] = None
+    ewma: Optional[float] = None
+    below: int = 0           # consecutive below-threshold observations
+    below_since: float = 0.0
+    cooldown_left: int = 0
+
+
+class DriftDetector:
+    """Per-stream EWMA drift detector with debouncing."""
+
+    def __init__(self, cfg: DriftConfig = DriftConfig()):
+        self.cfg = cfg
+        self._streams: Dict[str, _StreamDrift] = {}
+        self.events: List[DriftEvent] = []
+
+    def _state(self, stream: str) -> _StreamDrift:
+        return self._streams.setdefault(stream, _StreamDrift())
+
+    def baseline(self, stream: str) -> Optional[float]:
+        return self._state(stream).baseline
+
+    def ewma(self, stream: str) -> Optional[float]:
+        return self._state(stream).ewma
+
+    def rebaseline(self, stream: str) -> None:
+        """Re-anchor the baseline to the current EWMA (after recovery a new
+        drift episode must be judged against the *recovered* level)."""
+        st = self._state(stream)
+        if st.ewma is not None:
+            st.baseline = st.ewma
+        st.below = 0
+        st.cooldown_left = 0
+
+    def recovered(self, stream: str) -> bool:
+        """EWMA back above half the drift threshold below baseline."""
+        st = self._state(stream)
+        if st.baseline is None or st.ewma is None:
+            return False
+        return st.ewma >= st.baseline * (1.0 - 0.5 * self.cfg.threshold)
+
+    def observe(self, stream: str, stat: float, t: float = 0.0
+                ) -> Optional[DriftEvent]:
+        """Feed one per-chunk statistic; returns an event when drift fires."""
+        cfg = self.cfg
+        st = self._state(stream)
+        st.count += 1
+        st.ewma = (stat if st.ewma is None
+                   else (1 - cfg.alpha) * st.ewma + cfg.alpha * stat)
+        if st.count <= cfg.warmup:
+            st.baseline_sum += stat
+            st.baseline = st.baseline_sum / st.count
+            return None
+        if st.cooldown_left > 0:
+            st.cooldown_left -= 1
+            return None
+        assert st.baseline is not None
+        if st.ewma < st.baseline * (1.0 - cfg.threshold):
+            if st.below == 0:
+                st.below_since = t
+            st.below += 1
+        else:
+            st.below = 0
+        if st.below < cfg.patience:
+            return None
+        st.below = 0
+        st.cooldown_left = cfg.cooldown
+        ev = DriftEvent(stream=stream, t=t, stat=st.ewma,
+                        baseline=st.baseline,
+                        severity=1.0 - st.ewma / max(st.baseline, 1e-9),
+                        onset_t=st.below_since)
+        self.events.append(ev)
+        return ev

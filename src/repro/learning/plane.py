@@ -1,0 +1,361 @@
+"""The continual-learning plane: orchestrates drift -> label -> train ->
+shadow-eval -> promote/rollback beside the live serving plane.
+
+Attached to a :class:`~repro.serving.graph.GraphScheduler`, the plane hooks
+every finalized chunk (replacing the inline label-everything ``hitl.collect``
+stage) and runs the §V loop *online*:
+
+  1. **watch** — per-stream cascade statistics are recorded into the global
+     :class:`~repro.serving.monitor.Monitor`: mean fog confidence and
+     fog-accept rate over uncertain regions, plus **sentinel spot-checks**
+     — a trickle of the labor budget (``sentinel_per_chunk`` labels) spent
+     on randomly chosen regions, whose oracle-verified fog accuracy is the
+     statistic the :class:`~repro.learning.drift.DriftDetector` watches.
+     Confidence alone cannot see a *confidently wrong* model (a fully
+     swapped appearance distribution restores high confidence); verified
+     disagreement can, and the sentinel labels build the promotion gate's
+     unbiased holdout;
+  2. **label** — on a drift event the plane enters adaptation: uncertain
+     regions are enqueued into the :class:`LabelingQueue` and the oracle
+     labels top-K per chunk — most-uncertain-first with an epsilon-greedy
+     exploration share — under the labor budget tau (labels actually
+     issued are the only charge).  Queue labels train; sentinel labels
+     (uniform-random over regions) build the gate's unbiased holdout;
+  3. **train** — the :class:`BackgroundTrainer` replays issued labels
+     through the Eq. 8 / proximal update off the serving path, registering
+     each snapshot as a versioned candidate in the ``ModelZoo`` (lineage:
+     parent version, data span, labels consumed);
+  4. **promote** — the :class:`PromotionGate` shadow-evaluates candidates
+     against a holdout replay slice; a winning candidate is promoted in the
+     zoo and **hot-swapped** into every live stream's
+     ``fog.classify_regions`` stage mid-run (in-flight chunks finish on the
+     old weights; nothing stalls, nothing is lost);
+  5. **rollback** — if the previously promoted model beats the live one by
+     the gate's margin on the current holdout (both scored on the *same*
+     data, so a refreshing holdout cannot fake a regression), the zoo
+     rolls back to it (bit-identical weights) and hot-swaps it in.
+
+Adaptation runs until the labor budget tau is exhausted (tau is the
+episode's labeling allowance; a final Eq. 9 ensemble fit closes it);
+recovery of the drift statistic is logged for observability.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core.hitl import UNLABELED, OracleAnnotator
+from repro.core.incremental import ensemble_accuracy
+from repro.learning.drift import DriftConfig, DriftDetector
+from repro.learning.labeling import LabelCandidate, LabelingQueue
+from repro.learning.promotion import (PromotionGate, ReplayBuffer,
+                                      ShadowEvaluator)
+from repro.learning.trainer import BackgroundTrainer
+from repro.serving.monitor import Monitor
+
+
+@dataclass(frozen=True)
+class LearningConfig:
+    label_budget: int = 512        # the paper's human labor budget tau
+    labels_per_round: int = 24     # oracle asks per finalized chunk
+    sentinel_per_chunk: int = 1    # monitoring spot-checks per chunk
+    explore_frac: float = 0.5      # epsilon-greedy share of queue issues
+    queue_size: int = 2048
+    min_batch: int = 16            # fresh labels per training round
+    rule: str = "proximal"
+    eta: float = 0.3
+    passes: int = 2
+    min_gain: float = 0.0
+    min_holdout: int = 8
+    rollback_margin: float = 0.1
+    model_name: str = "fog-classifier"
+    drift: DriftConfig = field(default_factory=DriftConfig)
+
+
+class ContinualLearningPlane:
+    """Drift-triggered, budgeted, versioned online learning loop."""
+
+    def __init__(self, num_classes: int,
+                 cfg: LearningConfig = LearningConfig(), *,
+                 zoo=None, annotator: Optional[OracleAnnotator] = None,
+                 monitor: Optional[Monitor] = None):
+        self.cfg = cfg
+        self.num_classes = num_classes
+        self.zoo = zoo
+        # a caller-supplied monitor is kept through attach(); by default
+        # the plane adopts the scheduler's (hot_swap always logs there)
+        self._own_monitor = monitor is None
+        self.monitor = monitor or Monitor()
+        self.annotator = annotator or OracleAnnotator(budget=cfg.label_budget)
+        self.detector = DriftDetector(cfg.drift)
+        self.queue = LabelingQueue(max_size=cfg.queue_size)
+        self.evaluator = ShadowEvaluator(ReplayBuffer())
+        self.gate = PromotionGate(self.evaluator,
+                                  min_holdout=cfg.min_holdout,
+                                  min_gain=cfg.min_gain,
+                                  rollback_margin=cfg.rollback_margin)
+        self.trainer: Optional[BackgroundTrainer] = None
+        self.state = "monitor"         # monitor | adapt | exhausted
+        self.hot_swaps = 0
+        self.chunks_seen = 0
+        self.sentinel_labels = 0
+        self._drifted_streams: set = set()
+        self._recovery_logged = False
+        self._rollback_pending = False
+        self._rng = np.random.default_rng(0)   # sentinel region picks
+
+    # ------------------------------------------------------------------
+    def attach(self, scheduler) -> "ContinualLearningPlane":
+        """Wire the plane into a live scheduler (its zoo + monitor)."""
+        if self.zoo is None:
+            self.zoo = scheduler.graph.zoo
+        if self._own_monitor:
+            self.monitor = scheduler.monitor
+        self.trainer = BackgroundTrainer(
+            self.zoo, num_classes=self.num_classes,
+            model_name=self.cfg.model_name, rule=self.cfg.rule,
+            eta=self.cfg.eta, passes=self.cfg.passes,
+            min_batch=self.cfg.min_batch)
+        scheduler.plane = self
+        return self
+
+    @property
+    def live_W(self) -> np.ndarray:
+        return np.asarray(self.zoo.get(self.cfg.model_name).params["W"])
+
+    @property
+    def live_version(self) -> int:
+        return self.zoo.get(self.cfg.model_name).version
+
+    # ------------------------------------------------------------------
+    def _chunk_stats(self, res, fog_min_conf: float):
+        """(mean max-confidence, fog-accept rate) over valid proposals."""
+        valid = np.asarray(res.prop_valid)
+        idx = np.nonzero(valid)
+        if not len(idx[0]):
+            return None
+        conf = np.asarray(res.fog_scores).max(axis=-1)[idx]
+        return float(conf.mean()), float((conf >= fog_min_conf).mean())
+
+    def _harvest(self, stream, chunk, res, t: float,
+                 exclude=frozenset()) -> int:
+        """Enqueue this chunk's uncertain regions as label candidates.
+
+        ``exclude`` holds the (frame, region) positions the sentinel
+        already labelled this chunk: re-enqueueing them would charge the
+        budget twice for one region and leak holdout samples into the
+        training set."""
+        n = 0
+        valid = np.asarray(res.prop_valid)
+        for f in range(valid.shape[0]):
+            for i in np.nonzero(valid[f])[0]:
+                if (f, int(i)) in exclude:
+                    continue
+                self.queue.push(LabelCandidate(
+                    features=res.fog_features[f, i],
+                    box=res.prop_boxes[f, i],
+                    scores=res.fog_scores[f, i],
+                    gt_boxes=chunk.gt_boxes[f],
+                    gt_labels=chunk.gt_labels[f],
+                    stream=stream.name, t=t))
+                n += 1
+        return n
+
+    def _route_labels(self, issued, t: float) -> None:
+        """Queue-issued labels train; only the *sentinel* stream (random
+        regions, unbiased) feeds the holdout, so the gate scores candidates
+        on the serving distribution rather than on the uncertainty-biased
+        slice the queue selects for."""
+        for item in issued:
+            if item.label < 0:         # background / past-budget: not data
+                continue
+            self.trainer.add_labeled(item.candidate.features, item.label,
+                                     t=t)
+
+    def _sentinel(self, stream, chunk, res, t: float):
+        """Oracle spot-check on random regions: the verified-accuracy drift
+        statistic (and the gate's unbiased holdout data).
+
+        Returns (accuracy sample or None, set of checked (frame, region)
+        positions — excluded from harvesting so a region is never charged
+        twice or shared between holdout and training set)."""
+        checked: set = set()
+        if self.annotator.remaining == 0:
+            return None, checked
+        pos = np.argwhere(np.asarray(res.prop_valid))
+        if not len(pos):
+            return None, checked
+        k = min(self.cfg.sentinel_per_chunk, len(pos))
+        if k <= 0:
+            return None, checked
+        picks = pos[self._rng.choice(len(pos), size=k, replace=False)]
+        correct, n = 0, 0
+        for f, i in picks:
+            labels = self.annotator.label_regions(
+                res.prop_boxes[f, i][None, :], chunk.gt_boxes[f],
+                chunk.gt_labels[f])
+            lab = int(labels[0])
+            if lab == UNLABELED:       # budget ran out mid-check
+                break
+            checked.add((int(f), int(i)))
+            self.sentinel_labels += 1
+            if lab < 0:                # background region: no class verdict
+                continue
+            n += 1
+            correct += int(int(np.argmax(res.fog_scores[f, i])) == lab)
+            # sentinel labels are uniform-random over regions: they build
+            # the unbiased holdout the promotion gate scores against
+            self.evaluator.holdout.add(res.fog_features[f, i], lab, t=t)
+        return (correct / n if n else None), checked
+
+    # ------------------------------------------------------------------
+    def on_chunk(self, scheduler, stream, chunk, res, t: float,
+                 mode: str) -> None:
+        """Finalize hook: one finished chunk drives one plane step."""
+        if mode != "cloud":            # fallback results carry no features
+            return
+        self.chunks_seen += 1
+        if self.state == "monitor" and self.annotator.remaining == 0:
+            # the sentinel trickle spent the whole budget while healthy:
+            # monitoring is blind from here on — say so, don't pretend
+            self.state = "exhausted"
+            self.monitor.log_event("budget_exhausted", t=t,
+                                   labels=self.annotator.labels_provided)
+            return
+        pcfg = scheduler.graph.protocol.pcfg
+        stats = self._chunk_stats(res, pcfg.fog_min_conf)
+        if stats is not None:
+            conf, accept = stats
+            self.monitor.record(f"fog_confidence[{stream.name}]", conf, t)
+            self.monitor.record(f"fog_accept[{stream.name}]", accept, t)
+        # the drift statistic is oracle-VERIFIED accuracy (sentinel
+        # spot-checks): confidence cannot see a confidently-wrong model
+        acc, checked = self._sentinel(stream, chunk, res, t)
+        if acc is not None:
+            self.monitor.record(f"sentinel_acc[{stream.name}]", acc, t)
+            ev = self.detector.observe(stream.name, acc, t)
+            if ev is not None:
+                self._drifted_streams.add(stream.name)
+                self.monitor.incr("drift_events")
+                self.monitor.log_event("drift", t=t, stream=stream.name,
+                                       stat=ev.stat, baseline=ev.baseline,
+                                       severity=ev.severity,
+                                       onset_t=ev.onset_t)
+                if self.state == "monitor":
+                    # entering adaptation: labels from before this episode
+                    # describe the old regime — the snapshots keep that
+                    # history, the train/holdout buffers must not.  Repeat
+                    # events *during* adaptation (other streams catching
+                    # up, or cooldown expiry while still drifted) must NOT
+                    # re-drop the freshly-bought labels.
+                    self.trainer.drop_older_than(ev.onset_t)
+                    self.evaluator.holdout.drop_older_than(ev.onset_t)
+                    self.state = "adapt"
+
+        if self.state == "adapt":
+            self._adapt_step(scheduler, stream, chunk, res, t,
+                             exclude=checked)
+        if self.state != "exhausted" or self._rollback_pending:
+            # once exhausted the holdout is frozen, so one final check
+            # right after the transition settles the last promotion
+            self._rollback_pending = False
+            self._maybe_rollback(scheduler, t)
+
+    # ------------------------------------------------------------------
+    def _adapt_step(self, scheduler, stream, chunk, res, t: float,
+                    exclude=frozenset()) -> None:
+        self._harvest(stream, chunk, res, t, exclude=exclude)
+        issued = self.queue.issue(self.annotator, self.cfg.labels_per_round,
+                                  explore=self.cfg.explore_frac,
+                                  rng=self._rng)
+        self._route_labels(issued, t)
+
+        parent = self.live_version
+        rec = self.trainer.maybe_train(self.live_W, t, parent_version=parent)
+        if rec is not None:
+            decision = self.gate.evaluate(self.live_W, rec.params["W"], t)
+            rec.lineage["eval_score"] = decision["cand_score"]
+            if decision["promote"]:
+                self.zoo.promote(self.cfg.model_name, rec.version)
+                self.gate.note_promotion(decision["cand_score"])
+                inflight = scheduler.hot_swap(rec.params["W"],
+                                              version=rec.version, t=t)
+                self.hot_swaps += 1
+                self.monitor.log_event(
+                    "promotion", t=t, version=rec.version, parent=parent,
+                    score=decision["cand_score"],
+                    live_score=decision["live_score"], inflight=inflight)
+
+        if self.annotator.remaining == 0:
+            # labor budget spent: close the episode with the Eq. 9 ensemble
+            # (scored on the frozen holdout for the record) and one last
+            # rollback check of the final promotion
+            omega = self.trainer.fit_ensemble()
+            ens_acc = None
+            if omega is not None and len(self.evaluator.holdout):
+                xs, labels = self.evaluator.holdout.data()
+                ens_acc = ensemble_accuracy(
+                    np.stack(self.trainer.snapshots), omega, xs, labels)
+            self.state = "exhausted"
+            self._rollback_pending = True
+            self.monitor.log_event("budget_exhausted", t=t,
+                                   labels=self.annotator.labels_provided,
+                                   ensemble_acc=ens_acc,
+                                   live_acc=self.evaluator.score(
+                                       self.live_W))
+        elif self.gate.promotions > 0 and self._drifted_streams:
+            # a recovered stream re-anchors its baseline at the recovered
+            # level so a *new* episode is judged against it (and repeat
+            # events stop firing); adaptation itself continues while
+            # budget remains — tau is allocated to the episode
+            for s in [s for s in self._drifted_streams
+                      if self.detector.recovered(s)]:
+                self.detector.rebaseline(s)
+                self._drifted_streams.discard(s)
+            if not self._drifted_streams and not self._recovery_logged:
+                self._recovery_logged = True
+                self.monitor.log_event("recovered", t=t)
+
+    # ------------------------------------------------------------------
+    def _maybe_rollback(self, scheduler, t: float) -> None:
+        log = self.zoo.promotion_log(self.cfg.model_name)
+        if len(log) < 2:
+            return                      # nothing promoted to fall back to
+        prev = self.zoo.get_version(self.cfg.model_name, log[-2])
+        do, score = self.gate.should_rollback(self.live_W,
+                                              prev.params["W"])
+        if not do:
+            return
+        bad_version = self.live_version
+        rec = self.zoo.rollback(self.cfg.model_name)
+        self.gate.note_rollback()
+        inflight = scheduler.hot_swap(rec.params["W"], version=rec.version,
+                                      t=t)
+        self.hot_swaps += 1
+        self.monitor.log_event("rollback", t=t, from_version=bad_version,
+                               to_version=rec.version, score=score,
+                               inflight=inflight)
+        if self.state == "exhausted":
+            return
+        self.state = "adapt"           # the regression needs fixing
+
+    # ------------------------------------------------------------------
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "state": self.state,
+            "chunks_seen": self.chunks_seen,
+            "drift_events": len(self.detector.events),
+            "labels_charged": self.annotator.labels_provided,
+            "sentinel_labels": self.sentinel_labels,
+            "label_budget": self.annotator.budget,
+            "queue": dict(self.queue.stats),
+            "holdout": len(self.evaluator.holdout),
+            "trainer": self.trainer.summary() if self.trainer else {},
+            "promotions": self.gate.promotions,
+            "rollbacks": self.gate.rollbacks,
+            "hot_swaps": self.hot_swaps,
+            "live_version": (self.live_version if self.zoo is not None
+                             and self.cfg.model_name in self.zoo else None),
+        }

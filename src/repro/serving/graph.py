@@ -49,7 +49,7 @@ import numpy as np
 
 from repro.core import protocol as protocol_mod
 from repro.core.bandwidth import LatencyBreakdown, NetworkModel
-from repro.core.hitl import BACKGROUND, OracleAnnotator
+from repro.core.hitl import OracleAnnotator
 from repro.core.protocol import ChunkResult, HighLowProtocol
 from repro.serving.batching import (CrossStreamBatcher, DetectRequest,
                                     pack_frames)
@@ -121,7 +121,9 @@ class VideoFunctionGraph:
             labels = annotator.label_regions(
                 res.prop_boxes[t][idx], chunk.gt_boxes[t], chunk.gt_labels[t])
             for i, lab in zip(idx, labels):
-                if lab != BACKGROUND:
+                # skip BACKGROUND (inspected, no object) and UNLABELED
+                # (annotator budget exhausted — never inspected)
+                if lab >= 0:
                     learner.collect(res.fog_features[t, i], int(lab))
         newW, updated = learner.maybe_update(jnp.asarray(stream.W))
         if updated:
@@ -150,6 +152,11 @@ class StreamState:
     weight: float = 1.0
     clock: float = 0.0
     busy: bool = False
+    # adaptive SLO headroom: EWMA of observed deadline attainment drives the
+    # per-stream margin between its configured bounds (high attainment ->
+    # tighter margin -> more batching; misses -> margin widens fast)
+    slo_margin: float = 0.1
+    att_ewma: float = 1.0
     pending: Deque[Tuple[Any, bool]] = field(default_factory=deque)
     results: List[Tuple[Any, ChunkResult, str]] = field(default_factory=list)
 
@@ -172,6 +179,10 @@ class GraphScheduler:
                  cloud_devices: int = 1, cloud_replicas: int = 1,
                  autoscaler=None, scale_unit: str = "devices",
                  deadline_batching: bool = True, slo_margin: float = 0.1,
+                 adaptive_margin: bool = True,
+                 margin_bounds: Tuple[float, float] = (0.05, 0.5),
+                 margin_alpha: float = 0.25,
+                 cold_start_s: float = 0.0,
                  fault=None, fallback_fn: Optional[Callable] = None):
         proto = graph.protocol
         self.graph = graph
@@ -193,14 +204,22 @@ class GraphScheduler:
         self.cloud_executor = replicas[0]       # primary (never retired)
         self.router = Router(replicas, monitor=self.monitor,
                              autoscaler=autoscaler, scale_unit=scale_unit,
-                             replica_factory=_make_replica)
+                             replica_factory=_make_replica,
+                             cold_start_s=cold_start_s)
         self.autoscaler = autoscaler
         self.deadline_batching = deadline_batching
         # headroom fraction of the SLO held back when deriving the detect
         # deadline: estimates (service time, downstream work, device wait)
         # carry error, and a batch held open to the exact deadline misses
-        # on any slip
+        # on any slip.  ``slo_margin`` is each stream's *initial* margin;
+        # with ``adaptive_margin`` it then tracks an EWMA of the stream's
+        # observed deadline attainment between ``margin_bounds``.
         self.slo_margin = slo_margin
+        self.adaptive_margin = adaptive_margin
+        self.margin_bounds = margin_bounds
+        self.margin_alpha = margin_alpha
+        # continual-learning plane hook (ContinualLearningPlane.attach)
+        self.plane = None
         self.fault = fault
         self.fallback_fn = fallback_fn
         # estimate of the post-detect work (coords download + fog classify)
@@ -226,10 +245,14 @@ class GraphScheduler:
                    weight: float = 1.0) -> StreamState:
         fog_exec = Executor(f"fog-{name}", self.graph.registry,
                             self.graph.protocol.fog)
+        lo, hi = self.margin_bounds
+        att0 = 1.0 - (min(max(self.slo_margin, lo), hi) - lo) / max(hi - lo,
+                                                                    1e-9)
         st = StreamState(name=name, W=np.asarray(W), fog_exec=fog_exec,
                          learner=learner,
                          annotator=annotator or OracleAnnotator(),
-                         slo=slo, weight=weight)
+                         slo=slo, weight=weight,
+                         slo_margin=self.slo_margin, att_ewma=att0)
         self.streams[name] = st
         return st
 
@@ -294,7 +317,7 @@ class GraphScheduler:
             meta=dict(chunk=chunk, learn=learn, t0=t, qc=qc, wan_up=wan_up,
                       wan_bytes=float(enc.nbytes)))
         if stream.slo is not None and self.deadline_batching:
-            req.deadline = (t + stream.slo * (1.0 - self.slo_margin)
+            req.deadline = (t + stream.slo * (1.0 - stream.slo_margin)
                             - self._downstream_est)
         self.batcher.submit(req)
         self._push(arrival, "flush", {})
@@ -444,7 +467,14 @@ class GraphScheduler:
             self.monitor.record("slo_attained", 1.0 if met else 0.0, t0)
             self.monitor.record("slo_margin",
                                 stream.slo - res.latency.total, t0)
-        if (data["learn"] and stream.learner is not None
+            if self.adaptive_margin:
+                a = self.margin_alpha
+                stream.att_ewma = ((1.0 - a) * stream.att_ewma
+                                   + a * (1.0 if met else 0.0))
+                lo, hi = self.margin_bounds
+                stream.slo_margin = lo + (hi - lo) * (1.0 - stream.att_ewma)
+        if (self.plane is None and data["learn"]
+                and stream.learner is not None
                 and data["mode"] == "cloud"
                 and not stream.learner.budget_exhausted):
             updated, _ = stream.fog_exec.run(STAGE_COLLECT, stream, chunk,
@@ -454,7 +484,29 @@ class GraphScheduler:
         stream.clock = t
         stream.results.append((chunk, res, data["mode"]))
         stream.busy = False
+        if self.plane is not None and data["learn"]:
+            # the continual-learning plane runs beside serving: labeling and
+            # training cost background time, never this chunk's latency
+            self.plane.on_chunk(self, stream, chunk, res, t, data["mode"])
         self._pull_next(stream)
+
+    # ------------------------------------------------------------------
+    def hot_swap(self, W, *, version=None, t: Optional[float] = None) -> int:
+        """Swap a new fog-classifier readout into every live stream's
+        ``fog.classify_regions`` stage, mid-run and without stalling.
+
+        Chunks whose classify stage already dispatched finish on the old
+        weights; everything dispatched after this call uses the new ones —
+        no chunk is dropped, duplicated, or delayed by the swap.  Returns
+        the number of in-flight chunks the swap left untouched."""
+        W = np.asarray(W)
+        inflight = sum(1 for s in self.streams.values() if s.busy)
+        for s in self.streams.values():
+            s.W = W.copy()             # per-stream cache refresh
+        self.monitor.incr("hot_swaps")
+        self.monitor.log_event("hot_swap", t=t if t is not None else 0.0,
+                               version=version, inflight=inflight)
+        return inflight
 
     # ------------------------------------------------------------------
     def throughput_report(self) -> Dict[str, float]:

@@ -13,12 +13,20 @@ class Monitor:
         default_factory=lambda: defaultdict(list))
     counters: Dict[str, float] = field(
         default_factory=lambda: defaultdict(float))
+    # discrete control-plane events (drift, promotion, rollback, hot_swap)
+    events: List[dict] = field(default_factory=list)
 
     def record(self, name: str, value: float, t: float = 0.0) -> None:
         self.series[name].append((t, float(value)))
 
     def incr(self, name: str, value: float = 1.0) -> None:
         self.counters[name] += value
+
+    def log_event(self, name: str, t: float = 0.0, **fields) -> None:
+        self.events.append({"event": name, "t": t, **fields})
+
+    def events_of(self, name: str) -> List[dict]:
+        return [e for e in self.events if e["event"] == name]
 
     def values(self, name: str) -> List[float]:
         return [v for _, v in self.series[name]]

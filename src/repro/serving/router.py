@@ -33,7 +33,8 @@ class Router:
                  monitor: Optional[Monitor] = None,
                  autoscaler: Optional[Autoscaler] = None,
                  scale_unit: str = "devices",
-                 replica_factory: Optional[Callable[[int], Executor]] = None):
+                 replica_factory: Optional[Callable[[int], Executor]] = None,
+                 cold_start_s: float = 0.0):
         assert scale_unit in ("devices", "replicas")
         self.replicas = [Replica(e, uid=i) for i, e in enumerate(replicas)]
         self._next_uid = len(self.replicas)
@@ -41,6 +42,10 @@ class Router:
         self.autoscaler = autoscaler
         self.scale_unit = scale_unit
         self.replica_factory = replica_factory
+        # serverless container spin-up: a replica added at simulated time t
+        # serves its first request no earlier than t + cold_start_s (its
+        # devices start busy, not free-at-t=0)
+        self.cold_start_s = cold_start_s
         self._queue: List[Tuple[str, tuple, dict, float]] = []
         self.clock = 0.0
 
@@ -64,11 +69,17 @@ class Router:
         return min(load)[2]
 
     # ------------------------------------------------------------------
-    def scale_replicas(self, target: int) -> None:
+    def scale_replicas(self, target: int,
+                       now: Optional[float] = None) -> None:
         """Grow/shrink the pool to ``target`` *healthy* replicas
         (``scale_unit="replicas"``): dead replicas hold no capacity, so
-        they are swept out first and never counted toward the target."""
+        they are swept out first and never counted toward the target.
+
+        A replica added at simulated ``now`` models serverless container
+        spin-up: its devices come up busy until ``now + cold_start_s``
+        instead of free-at-t=0."""
         target = max(1, target)
+        now = self.clock if now is None else now
         for i in range(len(self.replicas) - 1, 0, -1):
             if (not self.replicas[i].healthy
                     and self.replicas[i].inflight == 0):
@@ -78,8 +89,15 @@ class Router:
                and self.replica_factory is not None):
             uid = self._next_uid
             self._next_uid += 1
-            self.replicas.append(Replica(self.replica_factory(uid), uid=uid))
+            ex = self.replica_factory(uid)
+            ready_at = now + self.cold_start_s
+            ex.clock = max(ex.clock, now)
+            ex.busy_until = [ready_at] * len(ex.busy_until)
+            self.replicas.append(Replica(ex, uid=uid))
             self.monitor.incr("replicas_added")
+            if self.cold_start_s > 0:
+                self.monitor.record("replica_cold_start", self.cold_start_s,
+                                    now)
         while self.healthy_count() > target:
             # retire idle healthy replicas from the tail; replica 0 is the
             # primary and always survives (schedulers hold a reference)
@@ -133,7 +151,7 @@ class Router:
                 current = self.healthy_count()
                 target = self.autoscaler.decide(done, queue, current)
                 if target != current:
-                    self.scale_replicas(target)
+                    self.scale_replicas(target, now=done)
             else:
                 target = self.autoscaler.decide(done, queue,
                                                 rep.executor.num_devices)
