@@ -1,15 +1,91 @@
 """Kernel micro-benchmarks: jnp-oracle wall time on CPU (the interpret-mode
-Pallas path validates correctness, not speed — noted in derived fields)."""
+Pallas path validates correctness, not speed — noted in derived fields).
+
+Includes the video serving hot-path stages (fused detect->split, compacted
+bucketed classify) so kernel-level and e2e throughput numbers
+(``bench_e2e_throughput``) can be correlated."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 
 from benchmarks.common import BenchContext, timeit
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _video_stage_rows(quick: bool):
+    """Fused vs unfused cloud stage + compacted vs full fog classify."""
+    from repro.configs.vpaas_video import ClassifierConfig, DetectorConfig
+    from repro.core import protocol as pm
+    from repro.core import regions as reg
+    from repro.models import classifier as clf_mod
+    from repro.models import detector as det_mod
+
+    det_cfg = DetectorConfig(name="bench-k-det", image_hw=(32, 32),
+                             widths=(8, 16))
+    clf_cfg = ClassifierConfig(name="bench-k-clf", crop_hw=(16, 16),
+                               widths=(8, 16), feature_dim=16)
+    pcfg = pm.ProtocolConfig()
+    det_params = det_mod.init_detector(det_cfg, jax.random.PRNGKey(0))
+    clf_params = clf_mod.init_classifier(clf_cfg, jax.random.PRNGKey(1))
+    W = jnp.asarray(clf_params["W"])
+    rows = []
+    f = 8 if quick else 16
+    frames = jax.random.uniform(jax.random.PRNGKey(2), (f, 32, 32, 3))
+
+    # cloud stage: detect + per-chunk split (2 dispatches + sliced splits,
+    # the sync path) vs the fused single-dispatch detect_split
+    def unfused():
+        det = pm.detect_regions(det_cfg, det_params, frames)
+        outs = [pm.split_uncertain(pcfg, {k: v[i:i + 2]
+                                          for k, v in det.items()})
+                for i in range(0, f, 2)]
+        jax.block_until_ready([s.prop_valid for s, _ in outs])
+
+    def fused():
+        split = pm.detect_split(det_cfg, pcfg, det_params, frames)
+        np.asarray(split.prop_valid)
+
+    unfused(), fused()                      # warm both jit caches
+    us_u = timeit(unfused)
+    us_f = timeit(fused)
+    rows.append({"name": f"detect_split_fused/f{f}",
+                 "us_per_call": f"{us_f:.0f}",
+                 "unfused_us": f"{us_u:.0f}",
+                 "fusion_speedup": f"{us_u / max(us_f, 1e-9):.2f}",
+                 "note": "1 dispatch + 1 host read vs 1+chunks dispatches"})
+
+    # fog stage: full-budget F x N classify vs compacted bucketed gather
+    split = pm.detect_split(det_cfg, pcfg, det_params, frames)
+    pv = np.asarray(split.prop_valid)
+    fidx, ridx, n_valid, bucket = reg.compaction_indices(pv)
+    idxs = np.zeros((3, bucket), np.int32)
+    idxs[0], idxs[1] = fidx, ridx
+    idxs_d = jnp.asarray(idxs)
+
+    def full():
+        m = pm.classify_regions(clf_cfg, pcfg, clf_params, W, frames, split)
+        np.asarray(m["fog_scores"])
+
+    def compacted():
+        m = pm.classify_compacted(clf_cfg, pcfg, clf_params, W[None],
+                                  frames, split, idxs_d)
+        np.asarray(m["fog_scores"])
+
+    full(), compacted()
+    us_full = timeit(full)
+    us_comp = timeit(compacted)
+    rows.append({"name": f"classify_compacted/f{f}n{pv.shape[1]}",
+                 "us_per_call": f"{us_comp:.0f}",
+                 "full_budget_us": f"{us_full:.0f}",
+                 "compaction_speedup": f"{us_full / max(us_comp, 1e-9):.2f}",
+                 "valid_frac": f"{n_valid / pv.size:.2f}",
+                 "crops": f"{bucket}/{pv.size}"})
+    return rows
 
 
 def run(ctx: BenchContext, quick: bool = False):
@@ -66,4 +142,6 @@ def run(ctx: BenchContext, quick: bool = False):
     fn(pa, pb).block_until_ready()
     us = timeit(lambda: fn(pa, pb).block_until_ready())
     rows.append({"name": f"iou_ref/{na}x{nb}", "us_per_call": f"{us:.0f}"})
+
+    rows.extend(_video_stage_rows(quick))
     return rows

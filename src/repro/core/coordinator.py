@@ -84,7 +84,7 @@ class CloudFogCoordinator:
                  learner: IncrementalLearner = None,
                  annotator: OracleAnnotator = None,
                  network: NetworkModel = None, monitor: Monitor = None,
-                 learning_plane=None):
+                 hot_path: str = "fused", learning_plane=None):
         self.protocol = protocol
         self.det_params = det_params
         self.clf_params = clf_params
@@ -99,6 +99,7 @@ class CloudFogCoordinator:
         self.scheduler = GraphScheduler(
             self.graph, network=self.network, monitor=self.monitor,
             batcher=CrossStreamBatcher(max_chunks=1, window=0.0),
+            hot_path=hot_path,
             fault=self.fault, fallback_fn=self._fog_fallback)
         self.plane = learning_plane
         if learning_plane is not None:
@@ -196,6 +197,7 @@ class MultiStreamCoordinator:
                  adaptive_margin: bool = True,
                  cold_start_s: float = 0.0,
                  scale_unit: Optional[str] = None,
+                 hot_path: str = "fused",
                  autoscaler=None, fault: FaultTolerantCoordinator = None,
                  learning_plane=None):
         self.protocol = protocol
@@ -217,6 +219,7 @@ class MultiStreamCoordinator:
             autoscaler=autoscaler, scale_unit=scale_unit,
             deadline_batching=deadline_batching,
             adaptive_margin=adaptive_margin, cold_start_s=cold_start_s,
+            hot_path=hot_path,
             fault=fault, fallback_fn=self._fog_fallback)
         self.plane = learning_plane
         if learning_plane is not None:
@@ -245,7 +248,12 @@ class MultiStreamCoordinator:
             for chunk in spec.chunks:
                 self.scheduler.submit(state, chunk, learn=learn)
         self.scheduler.run_until_idle()
+        return self.results()
 
+    def results(self) -> Dict[str, CoordinatorResult]:
+        """Per-stream metrics over everything finalized so far (offline
+        bookkeeping — callers that time the serving drain call this after
+        stopping the clock)."""
         out: Dict[str, CoordinatorResult] = {}
         for spec, state in zip(self.specs, self._states):
             f1 = F1Accumulator()

@@ -23,8 +23,24 @@ dispatch them as independent serverless functions (``repro.serving.graph``):
   ``split_uncertain``   §IV.B three-stage filter   (cloud side of detect)
   ``classify_regions``  HQ crop + one-vs-all merge (fog.classify_regions)
 
-``HighLowProtocol.process_chunk`` drives the same stage functions strictly
-sequentially — the single-stream reference path.  Orchestration (bytes,
+The serving hot path additionally fuses stages so tensors stay on device
+end-to-end (``repro.serving.graph`` with ``hot_path="fused"``):
+
+  ``detect_split``        detect + split in ONE jit call over the packed
+                          cross-stream batch (cloud.detect_split) — per-chunk
+                          coord bytes / crop counts come back as arrays, so
+                          the scheduler needs one host transfer per flush
+  ``classify_compacted``  gathers only the valid proposals of the whole
+                          flush into one bucketed crop batch, classifies
+                          cross-stream with per-stream readouts, and
+                          scatters scores back (fog.classify_batched)
+
+``HighLowProtocol.process_chunk`` drives the unfused stage functions
+strictly sequentially — the single-stream reference path.  The fused path
+is bit-identical to it: splitting a packed batch then slicing equals
+slicing then splitting (per-frame vmap), and the compacted classifier
+gathers crops from the same full crop grid before the backbone, whose
+per-row outputs are batch-composition-independent.  Orchestration (bytes,
 latency, cost accounting) happens at the stage boundaries.
 """
 from __future__ import annotations
@@ -111,29 +127,94 @@ def split_uncertain(pcfg: ProtocolConfig, det: Dict[str, jax.Array]
     return split, reg.coordinate_bytes(split)
 
 
-@functools.partial(jax.jit, static_argnames=("clf_cfg", "pcfg"))
-def classify_regions(clf_cfg: ClassifierConfig, pcfg: ProtocolConfig,
-                     clf_params, W, frames_hq: jax.Array,
-                     split: reg.RegionSplit) -> Dict[str, jax.Array]:
-    """fog.classify_regions — HQ crop + one-vs-all classify + merge."""
-    crops = reg.crop_batch(frames_hq, split.prop_boxes, clf_cfg.crop_hw)
-    f, n = crops.shape[0], crops.shape[1]
-    flat = crops.reshape(f * n, *crops.shape[2:])
-    out = clf_mod.classify(clf_cfg, clf_params, flat, W=W)
-    fog_scores = out["scores"].reshape(f, n, -1)
-    fog_feats = out["features"].reshape(f, n, -1)
+@functools.partial(jax.jit, static_argnames=("det_cfg", "pcfg"))
+def detect_split(det_cfg: DetectorConfig, pcfg: ProtocolConfig, det_params,
+                 frames: jax.Array) -> reg.RegionSplit:
+    """cloud.detect_split — fused detector + §IV.B split, one dispatch.
 
+    Takes the packed cross-stream frame batch and returns the full-batch
+    :class:`~repro.core.regions.RegionSplit`.  Both the split filter and
+    the detector are per-frame independent, so slicing the fused output per
+    chunk is bit-identical to running ``split_uncertain`` on each chunk's
+    detector slice — but the scheduler issues ONE jit call and needs one
+    host transfer (the validity mask, from which per-chunk coord bytes and
+    crop counts are derived) instead of O(chunks) calls and scalar syncs
+    per flush."""
+    det = det_mod.detect(det_cfg, det_params, frames)
+    return reg.split_regions(
+        det, theta_cls=pcfg.theta_cls, theta_loc=pcfg.theta_loc,
+        theta_iou=pcfg.theta_iou, theta_back=pcfg.theta_back, impl=pcfg.impl)
+
+
+def _merge_fog(pcfg: ProtocolConfig, split: reg.RegionSplit,
+               fog_scores: jax.Array, fog_feats: jax.Array
+               ) -> Dict[str, jax.Array]:
+    """Shared cloud-accepted + fog-classified merge.
+
+    ``fog_scores`` / ``fog_feats`` are zero at invalid proposal positions
+    (masked or scatter-initialised), so the merge — and therefore the whole
+    ChunkResult — is deterministic there regardless of which classify path
+    produced them."""
     fog_labels = jnp.argmax(fog_scores, axis=-1).astype(jnp.int32)
     fog_conf = jnp.max(fog_scores, axis=-1)
     fog_valid = split.prop_valid & (fog_conf >= pcfg.fog_min_conf)
-
-    # merge: cloud-accepted + fog-classified
     labels = jnp.where(split.acc_valid, split.acc_labels, fog_labels)
     valid = split.acc_valid | fog_valid
     source = jnp.where(split.acc_valid, 0, 1).astype(jnp.int32)
     return {"boxes": split.acc_boxes, "labels": labels, "valid": valid,
             "source": source, "fog_features": fog_feats,
             "fog_scores": fog_scores}
+
+
+@functools.partial(jax.jit, static_argnames=("clf_cfg", "pcfg"))
+def classify_regions(clf_cfg: ClassifierConfig, pcfg: ProtocolConfig,
+                     clf_params, W, frames_hq: jax.Array,
+                     split: reg.RegionSplit) -> Dict[str, jax.Array]:
+    """fog.classify_regions — HQ crop + one-vs-all classify + merge.
+
+    The full-budget reference path: every region slot in the F x N grid is
+    cropped and classified.  Outputs at invalid proposal positions are
+    masked to zero so the compacted path (which never computes them)
+    scatters into an identical result."""
+    crops = reg.crop_batch(frames_hq, split.prop_boxes, clf_cfg.crop_hw)
+    f, n = crops.shape[0], crops.shape[1]
+    flat = crops.reshape(f * n, *crops.shape[2:])
+    out = clf_mod.classify(clf_cfg, clf_params, flat, W=W)
+    mask = split.prop_valid[..., None]
+    fog_scores = jnp.where(mask, out["scores"].reshape(f, n, -1), 0.0)
+    fog_feats = jnp.where(mask, out["features"].reshape(f, n, -1), 0.0)
+    return _merge_fog(pcfg, split, fog_scores, fog_feats)
+
+
+@functools.partial(jax.jit, static_argnames=("clf_cfg", "pcfg"))
+def classify_compacted(clf_cfg: ClassifierConfig, pcfg: ProtocolConfig,
+                       clf_params, Ws: jax.Array, frames_hq: jax.Array,
+                       split: reg.RegionSplit, idxs: jax.Array
+                       ) -> Dict[str, jax.Array]:
+    """fog.classify_batched — compacted cross-stream classify.
+
+    ``idxs`` is one (3, B) int32 upload — rows ``(fidx, ridx, widx)``.
+    ``(fidx, ridx)`` index the valid proposals of the whole flush (padded to
+    a bucket with out-of-bounds rows: gathers clip, scatters drop), and
+    ``widx`` picks each crop's per-stream readout from the stacked ``Ws``
+    (G, d+1, C).  Only the gathered bucket rows pay the classifier-backbone
+    FLOPs — the full-budget path pays F x N — and the scores/features are
+    scattered back into zero-initialised grids, matching the masked
+    reference output bit-for-bit (the backbone is per-row deterministic,
+    and crops are gathered *after* the shared full crop grid, so the
+    bilinear resize keeps the reference path's exact lowering — only the
+    backbone, the dominant FLOPs term, runs compacted)."""
+    fidx, ridx, widx = idxs[0], idxs[1], idxs[2]
+    crops = reg.crop_batch(frames_hq, split.prop_boxes, clf_cfg.crop_hw)
+    gathered = crops[fidx, ridx]                    # (B, h, w, 3)
+    out = clf_mod.classify_multi(clf_cfg, clf_params, gathered, Ws, widx)
+    x, scores = out["features"], out["scores"]
+    f, n = split.prop_valid.shape
+    fog_scores = jnp.zeros((f, n, scores.shape[-1]), scores.dtype
+                           ).at[fidx, ridx].set(scores, mode="drop")
+    fog_feats = jnp.zeros((f, n, x.shape[-1]), x.dtype
+                          ).at[fidx, ridx].set(x, mode="drop")
+    return _merge_fog(pcfg, split, fog_scores, fog_feats)
 
 
 def assemble_result(split: reg.RegionSplit, merged: Dict[str, jax.Array],

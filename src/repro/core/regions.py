@@ -9,6 +9,7 @@ from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
 
@@ -63,6 +64,34 @@ def coordinate_bytes(split: RegionSplit) -> jax.Array:
     return jnp.sum(split.prop_valid.astype(jnp.float32)) * 9.0
 
 
+def compaction_indices(prop_valid: np.ndarray,
+                       buckets: Tuple[int, ...] = (4, 8, 16, 32, 64, 128)
+                       ) -> Tuple[np.ndarray, np.ndarray, int, int]:
+    """Host-side gather plan for the compacted classify path.
+
+    From the (F, N) validity mask (the flush's single host transfer) build
+    the (frame, region) index lists of the valid proposals, padded up to the
+    next bucket size so the jit'd compacted classifier sees few distinct
+    shapes.  Pad rows use the out-of-bounds frame index F: gathers clip
+    (harmless garbage crop), scatters drop (the result grid keeps its
+    zeros).  Past the largest bucket the batch runs at its exact size —
+    padding down would silently drop proposals.
+
+    Returns ``(fidx, ridx, n_valid, bucket_size)``.
+    """
+    pv = np.asarray(prop_valid, bool)
+    f = pv.shape[0]
+    idx = np.argwhere(pv)
+    n = len(idx)
+    size = next((b for b in buckets if n <= b), n)
+    fidx = np.full(size, f, np.int32)       # OOB pad: scatter-dropped
+    ridx = np.zeros(size, np.int32)
+    if n:
+        fidx[:n] = idx[:, 0]
+        ridx[:n] = idx[:, 1]
+    return fidx, ridx, n, size
+
+
 # ---------------------------------------------------------------------------
 # HQ crop extraction (fog side)
 # ---------------------------------------------------------------------------
@@ -95,3 +124,5 @@ def crop_batch(frames: jax.Array, boxes: jax.Array,
                out_hw: Tuple[int, int]) -> jax.Array:
     """frames (F, H, W, 3), boxes (F, N, 4) -> (F, N, h, w, 3)."""
     return jax.vmap(lambda f, b: crop_and_resize(f, b, out_hw))(frames, boxes)
+
+

@@ -42,6 +42,11 @@ class LabelCandidate:
     stream: str = ""
     t: float = 0.0
     uncertainty: float = field(default=0.0)
+    # readout version whose scores produced ``uncertainty``: candidates from
+    # before a promotion rank by the *old* model's confusion and must be
+    # re-scored (or expired) against the promoted readout before they can
+    # compete fairly for the labor budget
+    model_version: int = 0
 
     def __post_init__(self):
         if not self.uncertainty:
@@ -63,7 +68,8 @@ class LabelingQueue:
         self._seq = itertools.count()
         self.stats: Dict[str, int] = {"enqueued": 0, "dropped": 0,
                                       "issued": 0, "background": 0,
-                                      "unlabeled": 0}
+                                      "unlabeled": 0, "rescored": 0,
+                                      "expired": 0}
 
     def push(self, cand: LabelCandidate) -> bool:
         self.stats["enqueued"] += 1
@@ -128,6 +134,42 @@ class LabelingQueue:
                     self.stats["background"] += 1
             out.append(IssuedLabel(cand, lab))
         return out
+
+    def rescore(self, W, *, version: int,
+                expire_below: float = 0.0) -> Dict[str, int]:
+        """Age the queue after a model promotion / rollback hot-swap.
+
+        Every candidate enqueued under an older ``model_version`` has its
+        one-vs-all scores recomputed against the new readout ``W`` (the
+        stored features make this a host-side matmul — no crop is re-run)
+        and its priority re-ranked by the *new* model's margin uncertainty.
+        Candidates the promoted model now answers confidently
+        (``uncertainty < expire_below``) are expired: a human label there
+        buys almost nothing, and holding the slot starves fresher, genuinely
+        uncertain regions.  Returns ``{"rescored": ..., "expired": ...}``.
+        """
+        W = np.asarray(W, np.float64)
+        kept: List[Tuple[float, int, LabelCandidate]] = []
+        rescored = expired = 0
+        for neg_u, seq, cand in self._heap:
+            if cand.model_version >= version:
+                kept.append((neg_u, seq, cand))
+                continue
+            scores = 1.0 / (1.0 + np.exp(-(np.asarray(cand.features,
+                                                      np.float64) @ W)))
+            cand.scores = scores
+            cand.uncertainty = margin_uncertainty(scores)
+            cand.model_version = version
+            rescored += 1
+            if cand.uncertainty < expire_below:
+                expired += 1
+                continue
+            kept.append((-cand.uncertainty, seq, cand))
+        self._heap = kept
+        heapq.heapify(self._heap)
+        self.stats["rescored"] += rescored
+        self.stats["expired"] += expired
+        return {"rescored": rescored, "expired": expired}
 
     def __len__(self) -> int:
         return len(self._heap)

@@ -70,6 +70,12 @@ class LearningConfig:
     min_gain: float = 0.0
     min_holdout: int = 8
     rollback_margin: float = 0.1
+    # label-queue aging: a promotion/rollback hot-swap re-scores queued
+    # candidates against the new readout (their priorities reflect the
+    # pre-swap model's uncertainty) and expires the ones the new model is
+    # confident about (re-ranked uncertainty < expire_below)
+    rescore_on_swap: bool = True
+    expire_below: float = 0.05
     model_name: str = "fog-classifier"
     drift: DriftConfig = field(default_factory=DriftConfig)
 
@@ -98,6 +104,9 @@ class ContinualLearningPlane:
                                   rollback_margin=cfg.rollback_margin)
         self.trainer: Optional[BackgroundTrainer] = None
         self.state = "monitor"         # monitor | adapt | exhausted
+        # monotone swap epoch for queue aging: zoo version numbers move
+        # *backwards* on rollback, so staleness is tracked per hot-swap
+        self.swap_epoch = 0
         self.hot_swaps = 0
         self.chunks_seen = 0
         self.sentinel_labels = 0
@@ -159,7 +168,8 @@ class ContinualLearningPlane:
                     scores=res.fog_scores[f, i],
                     gt_boxes=chunk.gt_boxes[f],
                     gt_labels=chunk.gt_labels[f],
-                    stream=stream.name, t=t))
+                    stream=stream.name, t=t,
+                    model_version=self.swap_epoch))
                 n += 1
         return n
 
@@ -287,6 +297,7 @@ class ContinualLearningPlane:
                     "promotion", t=t, version=rec.version, parent=parent,
                     score=decision["cand_score"],
                     live_score=decision["live_score"], inflight=inflight)
+                self._age_queue(rec.params["W"], t)
 
         if self.annotator.remaining == 0:
             # labor budget spent: close the episode with the Eq. 9 ensemble
@@ -319,6 +330,19 @@ class ContinualLearningPlane:
                 self.monitor.log_event("recovered", t=t)
 
     # ------------------------------------------------------------------
+    def _age_queue(self, W, t: float) -> None:
+        """Queue aging on a hot-swap: candidates enqueued under the old
+        readout re-rank by the new model's uncertainty (or expire when the
+        new model is confident) before competing for the labor budget."""
+        self.swap_epoch += 1
+        if not self.cfg.rescore_on_swap or not len(self.queue):
+            return
+        aged = self.queue.rescore(W, version=self.swap_epoch,
+                                  expire_below=self.cfg.expire_below)
+        self.monitor.log_event("queue_rescore", t=t, epoch=self.swap_epoch,
+                               **aged)
+
+    # ------------------------------------------------------------------
     def _maybe_rollback(self, scheduler, t: float) -> None:
         log = self.zoo.promotion_log(self.cfg.model_name)
         if len(log) < 2:
@@ -337,6 +361,7 @@ class ContinualLearningPlane:
         self.monitor.log_event("rollback", t=t, from_version=bad_version,
                                to_version=rec.version, score=score,
                                inflight=inflight)
+        self._age_queue(rec.params["W"], t)
         if self.state == "exhausted":
             return
         self.state = "adapt"           # the regression needs fixing

@@ -66,6 +66,21 @@ def classify(cfg: ClassifierConfig, params, crops: jax.Array,
             "confidence": jnp.max(scores, axis=-1)}
 
 
+def classify_multi(cfg: ClassifierConfig, params, crops: jax.Array,
+                   Ws: jax.Array, widx: jax.Array) -> Dict[str, jax.Array]:
+    """One-vs-all scores with a *per-crop* readout selection.
+
+    ``Ws`` stacks G readout matrices (G, feature_dim + 1, C) and ``widx``
+    (b,) picks crop b's readout — the cross-stream compacted classify path
+    scores each stream's crops against that stream's own W in one batched
+    call.  With a single readout (G=1, widx=0) the einsum contracts exactly
+    like ``x @ W``, so scores stay bit-identical to :func:`classify`.
+    """
+    x = features(cfg, params, crops)
+    scores = jax.nn.sigmoid(jnp.einsum("bd,bdc->bc", x, Ws[widx]))
+    return {"features": x, "scores": scores}
+
+
 def classifier_loss(cfg: ClassifierConfig, params, crops: jax.Array,
                     labels: jax.Array) -> Tuple[jax.Array, Dict]:
     """One-vs-all BCE over all binary heads (backbone pre-training)."""

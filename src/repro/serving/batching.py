@@ -9,6 +9,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -232,6 +233,32 @@ def pack_frames(frame_arrays: List[np.ndarray],
         if pad:
             batch = np.concatenate(
                 [batch, np.zeros((pad,) + batch.shape[1:], batch.dtype)], 0)
+    return batch, slices, pad
+
+
+def pack_frames_device(frame_arrays: List[Any],
+                       buckets: Tuple[int, ...] = (2, 4, 8, 16, 32, 64)
+                       ) -> Tuple[Any, List[slice], int]:
+    """Device-side twin of :func:`pack_frames`: concat + zero-pad as lazy
+    jnp ops, so per-chunk frames that are already device-resident (the
+    ``encode_low`` output) are packed without a device->host->device round
+    trip.  Same bucket/slice semantics; a single request passes through
+    exactly as-is (the bit-identical sequential path — the array object
+    itself, so not even a copy is queued).  Returns
+    (batch, per-request slices, padded_frames)."""
+    assert frame_arrays, "pack_frames_device needs at least one request"
+    slices, off = [], 0
+    for a in frame_arrays:
+        slices.append(slice(off, off + a.shape[0]))
+        off += a.shape[0]
+    if len(frame_arrays) == 1:
+        return frame_arrays[0], slices, 0
+    batch = jnp.concatenate([jnp.asarray(a) for a in frame_arrays], axis=0)
+    size = next((b for b in buckets if off <= b), off)
+    pad = size - off
+    if pad:
+        batch = jnp.concatenate(
+            [batch, jnp.zeros((pad,) + batch.shape[1:], batch.dtype)], 0)
     return batch, slices, pad
 
 

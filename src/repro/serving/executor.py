@@ -78,3 +78,15 @@ class Executor:
         busy = sum(r.duration for r in self.records
                    if r.start >= self.clock - horizon)
         return min(1.0, busy / (horizon * max(self.num_devices, 1)))
+
+    def busy_fraction(self, t0: float, t1: float) -> float:
+        """Fraction of the simulated window [t0, t1] this executor's device
+        pool spent in service (`GraphScheduler.throughput_report` scores
+        the shared fog-batch executor with this over the detect span — a
+        starved accelerator shows up here before it shows up in
+        frames/sec)."""
+        if t1 <= t0:
+            return 0.0
+        busy = sum(max(0.0, min(r.start + r.duration, t1) - max(r.start, t0))
+                   for r in self.records)
+        return min(1.0, busy / ((t1 - t0) * max(self.num_devices, 1)))

@@ -30,9 +30,25 @@ replicas, the autoscaler can add/remove whole replicas
 (``scale_unit="replicas"``), and a replica that dies mid-run has its
 sub-batch re-queued to survivors (or the fog fallback) with no chunk lost.
 
+The default ``hot_path="fused"`` keeps the detect->split->classify dataflow
+**device-resident**: ``encode_low`` output never round-trips through numpy,
+cross-stream packing is a device-side concat+pad, the cloud stage is the
+fused ``cloud.detect_split`` (one jit dispatch and **one** blocking
+device->host read — the proposal-validity mask — per flush, instead of a
+``block_until_ready`` plus two scalar syncs per chunk), the fog stage is
+the compacted ``fog.classify_batched`` (only the flush's valid proposals
+are gathered into one bucketed crop batch and classified cross-stream with
+per-stream readouts, scattered back into the full result grid), per-stream
+readouts are uploaded once and refreshed only on hot-swap/learner update,
+and chunk results stay device-side futures queued in ``_inflight`` until
+their finalize event drains them — so flush k's detect overlaps flush
+k-1's host-side result materialization.  ``hot_path="sync"`` preserves the
+pre-fusion synchronous path (the benchmark baseline).  Both paths are
+bit-identical to ``HighLowProtocol.process_chunk`` on a single stream.
+
 With one stream and a zero batching window the event order degenerates to
-the strict sequential path, and because the same jit'd stage functions are
-reused, results are bit-identical to ``HighLowProtocol.process_chunk``.
+the strict sequential path, and because the stage functions agree
+bit-for-bit, results are identical to ``HighLowProtocol.process_chunk``.
 """
 from __future__ import annotations
 
@@ -48,11 +64,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import protocol as protocol_mod
+from repro.core import regions as reg
 from repro.core.bandwidth import LatencyBreakdown, NetworkModel
 from repro.core.hitl import OracleAnnotator
 from repro.core.protocol import ChunkResult, HighLowProtocol
 from repro.serving.batching import (CrossStreamBatcher, DetectRequest,
-                                    pack_frames)
+                                    pack_frames, pack_frames_device)
 from repro.serving.executor import Executor
 from repro.serving.monitor import Monitor
 from repro.serving.registry import Dispatcher, FunctionRegistry, ModelZoo
@@ -60,9 +77,13 @@ from repro.serving.router import Router
 
 STAGE_ENCODE = "fog.encode_low"
 STAGE_DETECT = "cloud.detect"
+STAGE_DETECT_SPLIT = "cloud.detect_split"      # fused detect + §IV.B split
 STAGE_CLASSIFY = "fog.classify_regions"
+STAGE_CLASSIFY_BATCH = "fog.classify_batched"  # compacted cross-stream
+STAGE_CLASSIFY_VIEW = "fog.classify_view"      # per-stream slice accounting
 STAGE_COLLECT = "hitl.collect"
-STAGES = (STAGE_ENCODE, STAGE_DETECT, STAGE_CLASSIFY, STAGE_COLLECT)
+STAGES = (STAGE_ENCODE, STAGE_DETECT, STAGE_DETECT_SPLIT, STAGE_CLASSIFY,
+          STAGE_CLASSIFY_BATCH, STAGE_CLASSIFY_VIEW, STAGE_COLLECT)
 
 
 # ---------------------------------------------------------------------------
@@ -83,17 +104,27 @@ class VideoFunctionGraph:
                                tier="fog")
         self.registry.register(STAGE_DETECT, self._detect, kind="inference",
                                tier="cloud", batchable=True)
+        self.registry.register(STAGE_DETECT_SPLIT, self._detect_split,
+                               kind="inference", tier="cloud",
+                               batchable=True, fused=True)
         self.registry.register(STAGE_CLASSIFY, self._classify,
                                kind="inference", tier="fog")
+        self.registry.register(STAGE_CLASSIFY_BATCH, self._classify_batched,
+                               kind="inference", tier="fog", batchable=True)
+        # accounting stage: a fog node's share of the batched classify is a
+        # lazy device-side slice of the shared result (no compute)
+        self.registry.register(STAGE_CLASSIFY_VIEW, lambda views: views,
+                               kind="postprocess", tier="fog")
         self.registry.register(STAGE_COLLECT, self._collect,
                                kind="postprocess", tier="fog")
         self.zoo.register("cloud-detector", self.det_params, p.det_cfg)
         self.zoo.register("fog-classifier", self.clf_params, p.clf_cfg)
         self.dispatcher = Dispatcher(self.registry, self.zoo)
         self.dispatcher.dispatch("cloud", STAGE_DETECT)
+        self.dispatcher.dispatch("cloud", STAGE_DETECT_SPLIT)
         self.dispatcher.dispatch("cloud", "cloud-detector")
-        for name in (STAGE_ENCODE, STAGE_CLASSIFY, STAGE_COLLECT,
-                     "fog-classifier"):
+        for name in (STAGE_ENCODE, STAGE_CLASSIFY, STAGE_CLASSIFY_BATCH,
+                     STAGE_CLASSIFY_VIEW, STAGE_COLLECT, "fog-classifier"):
             self.dispatcher.dispatch("fog", name)
 
     # -- stage callables (close over configs/params) ------------------------
@@ -104,6 +135,16 @@ class VideoFunctionGraph:
     def _detect(self, frames):
         return protocol_mod.detect_regions(self.protocol.det_cfg,
                                            self.det_params, frames)
+
+    def _detect_split(self, frames):
+        return protocol_mod.detect_split(self.protocol.det_cfg,
+                                         self.protocol.pcfg,
+                                         self.det_params, frames)
+
+    def _classify_batched(self, frames_hq, split, Ws, idxs):
+        return protocol_mod.classify_compacted(
+            self.protocol.clf_cfg, self.protocol.pcfg, self.clf_params, Ws,
+            frames_hq, split, idxs)
 
     def _classify(self, frames_hq, split, W):
         return protocol_mod.classify_regions(
@@ -125,7 +166,7 @@ class VideoFunctionGraph:
                 # (annotator budget exhausted — never inspected)
                 if lab >= 0:
                     learner.collect(res.fog_features[t, i], int(lab))
-        newW, updated = learner.maybe_update(jnp.asarray(stream.W))
+        newW, updated = learner.maybe_update(stream.W_device())
         if updated:
             stream.W = np.asarray(newW)   # fog model-cache refresh
             return 1
@@ -159,6 +200,20 @@ class StreamState:
     att_ewma: float = 1.0
     pending: Deque[Tuple[Any, bool]] = field(default_factory=deque)
     results: List[Tuple[Any, ChunkResult, str]] = field(default_factory=list)
+    # device-resident readout cache: W is uploaded once and re-uploaded only
+    # when the host-side array object changes (hot-swap / learner update),
+    # not per chunk.  Identity tracking rather than a setter keeps every
+    # existing `stream.W = ...` call site correct.
+    w_uploads: int = 0
+    _W_dev: Any = None
+    _W_src: Any = None
+
+    def W_device(self):
+        if self._W_dev is None or self._W_src is not self.W:
+            self._W_dev = jnp.asarray(self.W)
+            self._W_src = self.W
+            self.w_uploads += 1
+        return self._W_dev
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +238,10 @@ class GraphScheduler:
                  margin_bounds: Tuple[float, float] = (0.05, 0.5),
                  margin_alpha: float = 0.25,
                  cold_start_s: float = 0.0,
+                 hot_path: str = "fused",
+                 crop_buckets: Tuple[int, ...] = (4, 8, 16, 32, 64, 128),
                  fault=None, fallback_fn: Optional[Callable] = None):
+        assert hot_path in ("fused", "sync")
         proto = graph.protocol
         self.graph = graph
         self.network = network or proto.network
@@ -238,6 +296,28 @@ class GraphScheduler:
         # (start, service) of every detect dispatch, held here because a
         # replica retired by scale-down takes its ExecutionRecords with it
         self._detect_windows: List[Tuple[float, float]] = []
+        # --- device-resident hot path -------------------------------------
+        # "fused": one cloud.detect_split dispatch + ONE blocking host read
+        # (the validity mask) per flush, compacted cross-stream classify,
+        # results kept as device futures until their finalize event.
+        # "sync": the pre-fusion baseline (per-chunk split + scalar syncs +
+        # full-budget classify + block_until_ready) for A/B benchmarking.
+        self.hot_path = hot_path
+        self.crop_buckets = crop_buckets
+        # shared executor for the compacted cross-stream classify call (the
+        # per-stream share is accounted on each stream's own fog executor)
+        self.fog_batch_exec = Executor("fog-batch", graph.registry, proto.fog)
+        # device-side results awaiting materialization at their finalize
+        # event — the in-flight future queue that lets flush k's detect
+        # overlap flush k-1's host-side result handling
+        self._inflight: Deque[dict] = deque()
+        # host_syncs counts *blocking* device->host reads on the dispatch
+        # path (the reads that stall the accelerator feed; the per-chunk
+        # result downloads happen later, at finalize, and are counted as
+        # result_downloads)
+        self.hot_path_stats = {"flushes": 0, "host_syncs": 0,
+                               "result_downloads": 0, "crops_classified": 0,
+                               "crops_budget": 0, "inflight_peak": 0}
 
     # ------------------------------------------------------------------
     def add_stream(self, name: str, *, W, learner=None, annotator=None,
@@ -286,6 +366,8 @@ class GraphScheduler:
             t, _, action, data = heapq.heappop(self._events)
             if action == "ingest":
                 self._ingest(t, **data)
+            elif action == "arrive":
+                self._arrive(t, **data)
             elif action == "flush":
                 self._flush(t)
             else:
@@ -309,13 +391,28 @@ class GraphScheduler:
         qc = proto.fog.encode_time(f)
         enc, _ = stream.fog_exec.run(STAGE_ENCODE, chunk.frames, now=t,
                                      model_time=qc)
-        wan_up = self.network.wan_time(float(enc.nbytes))
+        self._push(t, "arrive", dict(stream=stream, chunk=chunk,
+                                     learn=learn, enc=enc, qc=qc))
+
+    def _arrive(self, t: float, stream: StreamState, chunk, learn: bool,
+                enc, qc: float) -> None:
+        """Arrival bookkeeping, split from ingest by a same-sim-time event:
+        when several streams ingest in one burst (start-up, post-flush),
+        every encode dispatches to the device *before* the first byte-count
+        read blocks on one of them, so the host's nbytes reads overlap the
+        other chunks' in-flight encodes instead of serializing them.  Same
+        simulated times and ordering (same-time events pop in push order);
+        ``float(enc.nbytes)`` stays the one unavoidable ingest-side read."""
+        wan_bytes = float(enc.nbytes)
+        wan_up = self.network.wan_time(wan_bytes)
         arrival = t + qc + wan_up
+        frames = (enc.frames if self.hot_path == "fused"
+                  else np.asarray(enc.frames))
         req = DetectRequest(
-            frames=np.asarray(enc.frames), arrival=arrival, stream=stream,
+            frames=frames, arrival=arrival, stream=stream,
             weight=stream.weight,
             meta=dict(chunk=chunk, learn=learn, t0=t, qc=qc, wan_up=wan_up,
-                      wan_bytes=float(enc.nbytes)))
+                      wan_bytes=wan_bytes))
         if stream.slo is not None and self.deadline_batching:
             req.deadline = (t + stream.slo * (1.0 - stream.slo_margin)
                             - self._downstream_est)
@@ -387,8 +484,14 @@ class GraphScheduler:
                 self.fault.note_replica_failure(uid, t, requeued=0)
                 continue
             break
-        batch, slices, pad = pack_frames([r.frames for r in reqs],
-                                         buckets=self.batcher.pad_buckets)
+        fused = self.hot_path == "fused"
+        if fused:
+            batch, slices, pad = pack_frames_device(
+                [r.frames for r in reqs], buckets=self.batcher.pad_buckets)
+        else:
+            batch, slices, pad = pack_frames(
+                [np.asarray(r.frames) for r in reqs],
+                buckets=self.batcher.pad_buckets)
         n_frames = batch.shape[0]
         svc = proto.cloud.detect_time(n_frames)
         rep = self.router.replicas[idx]
@@ -411,12 +514,29 @@ class GraphScheduler:
                 return
         # real queue depth (frames still waiting / in flight to the cloud)
         queue_depth = self.batcher.pending_frames
+        self.hot_path_stats["flushes"] += 1
+        if fused:
+            self._dispatch_fused(t, reqs, slices, pad, batch, svc, idx,
+                                 queue_depth)
+        else:
+            self._dispatch_sync(t, reqs, slices, pad, batch, svc, idx,
+                                queue_depth)
+
+    def _dispatch_sync(self, t: float, reqs: List[DetectRequest], slices,
+                       pad: int, batch, svc: float, idx: int,
+                       queue_depth: int) -> None:
+        """Pre-fusion baseline: blocking detect, one ``split_uncertain``
+        jit call plus two scalar device syncs per chunk, full-budget
+        classify, immediate result materialization."""
+        proto = self.graph.protocol
+        n_frames = batch.shape[0]
         w0 = time.perf_counter()
         det, done, _ = self.router.route(STAGE_DETECT, jnp.asarray(batch),
                                          now=t, model_time=svc,
                                          queue_depth=queue_depth,
                                          replica=idx)
         jax.block_until_ready(det)
+        self.hot_path_stats["host_syncs"] += 1
         self.detect_stats["calls"] += 1
         self.detect_stats["frames"] += n_frames - pad
         self.detect_stats["padded_frames"] += pad
@@ -430,6 +550,7 @@ class GraphScheduler:
                                                               det_i)
             wan_down = self.network.wan_time(float(coord_bytes))
             n_crops = int(np.sum(np.asarray(split.prop_valid)))
+            self.hot_path_stats["host_syncs"] += 2   # the two scalar reads
             clf_time = proto.fog.classify_time(max(n_crops, 1))
             obs = wan_down + clf_time
             self._downstream_est = (obs if obs > self._downstream_est
@@ -437,6 +558,8 @@ class GraphScheduler:
                                     + 0.1 * obs)
             stream = req.stream
             chunk = req.meta["chunk"]
+            self.hot_path_stats["crops_classified"] += split.prop_valid.size
+            self.hot_path_stats["crops_budget"] += split.prop_valid.size
             merged, _ = stream.fog_exec.run(
                 STAGE_CLASSIFY, jnp.asarray(chunk.frames), split,
                 jnp.asarray(stream.W), now=done + wan_down,
@@ -451,13 +574,160 @@ class GraphScheduler:
                 split, merged, wan_bytes=req.meta["wan_bytes"],
                 coord_bytes=float(coord_bytes),
                 cloud_frames=req.frames.shape[0], latency=lat)
+            self.hot_path_stats["host_syncs"] += 1   # eager materialization
             self._push(req.meta["t0"] + lat.total, "finalize",
                        dict(stream=stream, chunk=chunk, res=res,
                             mode="cloud", learn=req.meta["learn"],
                             t0=req.meta["t0"]))
 
+    def _dispatch_fused(self, t: float, reqs: List[DetectRequest], slices,
+                        pad: int, batch, svc: float, idx: int,
+                        queue_depth: int) -> None:
+        """Device-resident hot path: one fused detect+split dispatch, ONE
+        blocking host read (the validity mask) per flush, one compacted
+        cross-stream classify dispatch, and per-chunk results left as
+        device futures drained at their finalize events."""
+        proto = self.graph.protocol
+        n_frames = batch.shape[0]
+        w0 = time.perf_counter()
+        split, done, _ = self.router.route(
+            STAGE_DETECT_SPLIT, batch, now=t, model_time=svc,
+            queue_depth=queue_depth, replica=idx)
+        # THE flush's single blocking device->host read: per-chunk coord
+        # bytes, crop counts, and the compaction gather plan are all
+        # derived from this one (F, N) bool mask on the host
+        pv = np.asarray(split.prop_valid)
+        self.hot_path_stats["host_syncs"] += 1
+        self.detect_stats["calls"] += 1
+        self.detect_stats["frames"] += n_frames - pad
+        self.detect_stats["padded_frames"] += pad
+        self.detect_stats["wall_s"] += time.perf_counter() - w0
+        start = done - svc
+        self._detect_windows.append((start, svc))
+
+        # detector padding rows carry no chunk: drop them before building
+        # the gather plan (a zero-frame can still excite a random detector)
+        f_real = n_frames - pad
+        pv = pv[:f_real]
+        counts = pv.sum(axis=1)
+        split_real = (reg.RegionSplit(*(v[:f_real] for v in split))
+                      if pad else split)
+        fidx, ridx, n_valid, bucket = reg.compaction_indices(
+            pv, self.crop_buckets)
+        self.hot_path_stats["crops_classified"] += bucket
+        self.hot_path_stats["crops_budget"] += int(pv.size)
+
+        # pack the cached HQ frames: host-side video sources, so concat on
+        # the host and pay ONE upload per flush (not one device_put per
+        # chunk), and stack the distinct per-stream readouts
+        if len(reqs) == 1:
+            hq_batch = jnp.asarray(reqs[0].meta["chunk"].frames)
+        else:
+            hq_batch = jnp.asarray(np.concatenate(
+                [np.asarray(r.meta["chunk"].frames) for r in reqs], axis=0))
+        w_group: Dict[int, int] = {}
+        ws_list: List[Any] = []
+        req_w = np.empty(len(reqs), np.int32)
+        frame_req = np.empty(f_real, np.int32)
+        for qi, (r, sl) in enumerate(zip(reqs, slices)):
+            key = id(r.stream.W)
+            if key not in w_group:
+                w_group[key] = len(ws_list)
+                ws_list.append(r.stream.W_device())
+            req_w[qi] = w_group[key]
+            frame_req[sl] = qi
+        Ws = (ws_list[0][None] if len(ws_list) == 1
+              else jnp.stack(ws_list))
+        # one (3, B) index upload: (fidx, ridx, widx) rows
+        idxs = np.zeros((3, bucket), np.int32)
+        idxs[0] = fidx
+        idxs[1] = ridx
+        if n_valid:
+            idxs[2, :n_valid] = req_w[frame_req[fidx[:n_valid]]]
+
+        merged, _ = self.fog_batch_exec.run(
+            STAGE_CLASSIFY_BATCH, hq_batch, split_real, Ws,
+            jnp.asarray(idxs),
+            now=done, model_time=proto.fog.classify_time(max(n_valid, 1)))
+
+        # the whole flush's results travel as ONE device-side bundle; the
+        # first finalize event that needs it materializes the full arrays
+        # in a single host read and every chunk then slices numpy views —
+        # no per-chunk device-slice dispatches, no per-chunk downloads
+        bundle = dict(split=split_real, merged=merged, np=None)
+        for req, sl in zip(reqs, slices):
+            n_crops = int(counts[sl].sum())
+            coord_bytes = 9.0 * n_crops
+            wan_down = self.network.wan_time(coord_bytes)
+            clf_time = proto.fog.classify_time(max(n_crops, 1))
+            obs = wan_down + clf_time
+            self._downstream_est = (obs if obs > self._downstream_est
+                                    else 0.9 * self._downstream_est
+                                    + 0.1 * obs)
+            stream = req.stream
+            chunk = req.meta["chunk"]
+            # the stream's share of the batched classify: pure accounting
+            # on its own fog node's clock (the compute already ran batched)
+            stream.fog_exec.run(STAGE_CLASSIFY_VIEW, sl,
+                                now=done + wan_down, model_time=clf_time)
+            lat = LatencyBreakdown(
+                quality_control=req.meta["qc"],
+                transmission=req.meta["wan_up"] + wan_down,
+                cloud_inference=svc,
+                fog_inference=clf_time,
+                queue_wait=max(0.0, start - req.arrival))
+            pending = dict(
+                bundle=bundle, sl=sl, wan_bytes=req.meta["wan_bytes"],
+                coord_bytes=coord_bytes,
+                cloud_frames=req.frames.shape[0], latency=lat)
+            self._inflight.append(pending)
+            self.hot_path_stats["inflight_peak"] = max(
+                self.hot_path_stats["inflight_peak"], len(self._inflight))
+            self._push(req.meta["t0"] + lat.total, "finalize",
+                       dict(stream=stream, chunk=chunk, pending=pending,
+                            mode="cloud", learn=req.meta["learn"],
+                            t0=req.meta["t0"]))
+
     def _finalize(self, t: float, data: dict) -> None:
-        stream, chunk, res = data["stream"], data["chunk"], data["res"]
+        stream, chunk = data["stream"], data["chunk"]
+        res = data.get("res")
+        if res is None:
+            # drain the in-flight future: the flush's device-side bundle
+            # materializes to numpy on its first finalize (one host read
+            # for the whole flush), so the device ran ahead on later
+            # flushes while these results waited for their events
+            pending = data["pending"]
+            bundle = pending["bundle"]
+            if bundle["np"] is None:
+                # id-dedup: the detector boxes appear as acc_boxes,
+                # prop_boxes AND merged["boxes"] — one buffer, one download
+                cache: Dict[int, np.ndarray] = {}
+
+                def _np(v):
+                    r = cache.get(id(v))
+                    if r is None:
+                        r = cache[id(v)] = np.asarray(v)
+                    return r
+
+                bundle["np"] = (
+                    reg.RegionSplit(*(_np(v) for v in bundle["split"])),
+                    {k: _np(v) for k, v in bundle["merged"].items()})
+                self.hot_path_stats["result_downloads"] += 1
+            split_np, merged_np = bundle["np"]
+            sl = pending["sl"]
+            res = data["res"] = protocol_mod.assemble_result(
+                reg.RegionSplit(*(v[sl] for v in split_np)),
+                {k: v[sl] for k, v in merged_np.items()},
+                wan_bytes=pending["wan_bytes"],
+                coord_bytes=pending["coord_bytes"],
+                cloud_frames=pending["cloud_frames"],
+                latency=pending["latency"])
+            # identity scan, not deque.remove: == on dicts of device arrays
+            # would trigger ambiguous elementwise comparison
+            for i, p in enumerate(self._inflight):
+                if p is pending:
+                    del self._inflight[i]
+                    break
         t0 = data["t0"]
         self.monitor.record("latency", res.latency.total, t0)
         self.monitor.record("wan_bytes", res.wan_bytes, t0)
@@ -518,14 +788,37 @@ class GraphScheduler:
         d.update({f"batch_{k}": v for k, v in self.batcher.stats.items()})
         d["replicas"] = len(self.router.replicas)
         d["healthy_replicas"] = self.router.healthy_count()
+        d["hot_path"] = self.hot_path
+        hps = self.hot_path_stats
+        d.update({f"hot_{k}": v for k, v in hps.items()})
+        if hps["flushes"]:
+            d["host_syncs_per_flush"] = hps["host_syncs"] / hps["flushes"]
+        if hps["crops_budget"]:
+            # fraction of full-budget fog-classify FLOPs the compacted
+            # (bucketed) gather avoided this run
+            d["classify_flops_saved_frac"] = (
+                1.0 - hps["crops_classified"] / hps["crops_budget"])
+        d["w_uploads"] = sum(s.w_uploads for s in self.streams.values())
         # simulated detect-stage makespan across the replica pool: with R
         # replicas the sub-batches overlap, so frames/span is the serving
         # plane's *capacity*, unlike frames/wall_s (one-CPU jit time)
         if self._detect_windows:
-            span = (max(s + dur for s, dur in self._detect_windows)
-                    - min(s for s, _ in self._detect_windows))
+            t_lo = min(s for s, _ in self._detect_windows)
+            t_hi = max(s + dur for s, dur in self._detect_windows)
+            span = t_hi - t_lo
             d["detect_span_s"] = span
             d["sim_frames_per_s"] = (d["frames"] / span if span > 0 else 0.0)
+            # detect-device occupancy: busy fraction of the replica pool
+            # over the detect span (a starved accelerator reads low here);
+            # computed from _detect_windows because retired replicas take
+            # their ExecutionRecords with them.  The shared fog-batch
+            # executor never retires, so it reports via busy_fraction.
+            busy = sum(dur for _, dur in self._detect_windows)
+            pool = max(1, len(self.router.replicas))
+            d["detect_occupancy"] = (min(1.0, busy / (span * pool))
+                                     if span > 0 else 0.0)
+            d["fog_batch_occupancy"] = self.fog_batch_exec.busy_fraction(
+                t_lo, t_hi)
         att = self.monitor.values("slo_attained")
         if att:
             d["slo_attainment"] = float(np.mean(att))

@@ -60,10 +60,16 @@ def test_graph_registers_stages_and_models(models):
     assert graph.registry.entry("cloud.detect").metadata["batchable"]
     assert graph.registry.entry("fog.encode_low").kind == "preprocess"
     assert graph.registry.list(kind="inference") == [
-        "cloud.detect", "fog.classify_regions"]
+        "cloud.detect", "cloud.detect_split", "fog.classify_batched",
+        "fog.classify_regions"]
+    # the fused cloud stage and the compacted fog stage are both batchable
+    assert graph.registry.entry("cloud.detect_split").metadata["fused"]
+    assert graph.registry.entry("fog.classify_batched").metadata["batchable"]
     assert "cloud-detector" in graph.zoo and "fog-classifier" in graph.zoo
     assert "cloud.detect" in graph.dispatcher.deployed("cloud")
+    assert "cloud.detect_split" in graph.dispatcher.deployed("cloud")
     assert "fog.classify_regions" in graph.dispatcher.deployed("fog")
+    assert "fog.classify_batched" in graph.dispatcher.deployed("fog")
 
 
 # ---------------------------------------------------------------------------
@@ -96,9 +102,10 @@ def test_single_stream_matches_sequential(models):
     assert out.bandwidth == bytes_ref
     assert out.cloud_cost == cost_ref
     assert out.latencies == lats_ref
-    # graph bookkeeping: every chunk passed through the executors
+    # graph bookkeeping: every chunk passed through the executors (the
+    # fused hot path dispatches the cloud.detect_split stage)
     assert coord.scheduler.cloud_executor.records
-    assert all(r.fn_name == "cloud.detect"
+    assert all(r.fn_name == "cloud.detect_split"
                for r in coord.scheduler.cloud_executor.records)
     # no batching delay on the sequential path
     assert all(r.latency.queue_wait == 0.0
