@@ -38,6 +38,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import numpy as np
 
+from benchmarks.common import write_json
 from repro.core.coordinator import MultiStreamCoordinator, StreamSpec
 from repro.core.incremental import IncrementalLearner
 from repro.core.protocol import HighLowProtocol
@@ -202,10 +203,12 @@ def bench(n_streams=3, pre=6, post=14, frames=4, hw=(128, 128),
 
 
 def run(ctx=None, quick: bool = False):
-    """benchmarks.run entry point."""
-    rows, _, _ = bench(smoke=quick, **(
+    """benchmarks.run entry point — also emits artifacts/BENCH_drift.json."""
+    rows, summary, _ = bench(smoke=quick, **(
         dict(pre=3, post=4, frames=2, hw=(32, 32), budget=64)
         if quick else {}))
+    write_json(summary, os.path.join(os.path.dirname(__file__), "..",
+                                     "artifacts", "BENCH_drift.json"))
     return rows
 
 
@@ -229,6 +232,8 @@ def main() -> None:
                                    budget=args.budget)
     for row in rows:
         print(",".join(f"{k}={v}" for k, v in row.items()))
+    write_json(summary, os.path.join(os.path.dirname(__file__), "..",
+                                     "artifacts", "BENCH_drift.json"))
 
     cont, every = summary["continual"], summary["label_everything"]
     plane = out["continual"]["plane"]

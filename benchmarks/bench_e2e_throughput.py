@@ -28,7 +28,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -39,6 +38,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import jax
 import numpy as np
 
+from benchmarks.common import write_json
 from repro.configs.vpaas_video import ClassifierConfig, DetectorConfig
 from repro.core.coordinator import MultiStreamCoordinator
 from repro.core.protocol import HighLowProtocol
@@ -178,19 +178,13 @@ def bench(n_streams: int = 8, chunks: int = 4, frames: int = 2,
     return rows, payload
 
 
-def write_json(payload: dict, path: str) -> None:
-    with open(path, "w") as fh:
-        json.dump(payload, fh, indent=2, sort_keys=True)
-
-
 def run(ctx=None, quick: bool = False):
     """benchmarks.run entry point — also emits artifacts/BENCH_e2e.json."""
     rows, payload = bench(n_streams=4 if quick else 8,
                           chunks=2 if quick else 4,
                           repeats=1 if quick else 3)
-    art = os.path.join(os.path.dirname(__file__), "..", "artifacts")
-    os.makedirs(art, exist_ok=True)
-    write_json(payload, os.path.join(art, "BENCH_e2e.json"))
+    write_json(payload, os.path.join(os.path.dirname(__file__), "..",
+                                     "artifacts", "BENCH_e2e.json"))
     return rows
 
 

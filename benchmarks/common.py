@@ -21,6 +21,19 @@ from repro.video import synthetic
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 
 
+def write_json(payload, path: str) -> None:
+    """Dump a machine-readable benchmark summary, creating the directory.
+
+    The one shared writer: three benches emitting BENCH_*.json artifacts
+    each grew a private copy and they drifted (one lost its makedirs —
+    `--json artifacts/...` crashed on a fresh checkout after the whole
+    benchmark had already run)."""
+    import json
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True, default=str)
+
+
 @dataclass
 class BenchContext:
     det_params: object

@@ -27,6 +27,8 @@ BENCHES = [
     ("multistream", "benchmarks.bench_multistream"),
     ("slo_serving", "benchmarks.bench_slo_serving"),
     ("drift_recovery", "benchmarks.bench_drift_recovery"),
+    # also emits machine-readable artifacts/BENCH_per_site.json
+    ("per_site", "benchmarks.bench_per_site"),
     # also emits machine-readable artifacts/BENCH_e2e.json
     ("e2e_throughput", "benchmarks.bench_e2e_throughput"),
     ("kernels", "benchmarks.bench_kernels"),

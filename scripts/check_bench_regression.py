@@ -1,0 +1,170 @@
+"""CI perf-regression gate: diff a fresh BENCH_e2e.json against the
+committed baseline.
+
+The e2e throughput benchmark emits machine-readable results
+(``BENCH_e2e.json``); the repository commits a baseline at
+``benchmarks/baselines/BENCH_e2e.json`` (the root/artifacts copies are
+scratch outputs, gitignored).  CI re-runs the benchmark and this script
+fails the build when a gated metric regresses beyond tolerance — a perf
+claim that is not continuously re-checked stops being true silently.
+Refresh the baseline by re-running the full benchmark and committing the
+new file alongside the change that moved the number.
+
+Gated metrics:
+
+  * ``speedup``                     — fused/sync wall throughput ratio,
+    higher is better.  Compared only when the fresh run used the SAME
+    workload as the baseline: the quick CI smoke (4 streams) measures a
+    different operating point than the committed 8-stream baseline, and
+    comparing across workloads would gate on noise, not regressions.
+  * ``host_syncs_per_flush_fused``  — blocking device->host reads per
+    flush, lower is better.  Workload-invariant (the device-residency
+    guarantee is ONE sync per flush regardless of stream count), so it is
+    always compared.
+  * ``classify_flops_saved_frac``   — compacted-classify savings, higher
+    is better; compared when workloads match.
+  * ``bit_identical``               — hard gate: the fused path must never
+    trade correctness for speed.
+
+Usage:
+  python scripts/check_bench_regression.py \
+      --baseline benchmarks/baselines/BENCH_e2e.json \
+      --fresh artifacts/BENCH_e2e.json
+  python scripts/check_bench_regression.py --self-test   # gate the gate
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+
+def _load(path: str) -> Dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def same_workload(baseline: Dict, fresh: Dict) -> bool:
+    """Identical workload descriptors, field-for-field.
+
+    Comparing only overlapping keys would let a payload that renamed or
+    dropped a field masquerade as the baseline's workload and put the
+    noisy, workload-bound gates back in play across operating points."""
+    wb, wf = baseline.get("workload"), fresh.get("workload")
+    if not isinstance(wb, dict) or not isinstance(wf, dict) or not wb:
+        return False
+    return wb == wf
+
+
+def compare(baseline: Dict, fresh: Dict, tolerance: float
+            ) -> Tuple[List[str], List[str]]:
+    """Returns (ok lines, regression lines)."""
+    ok: List[str] = []
+    bad: List[str] = []
+    matched = same_workload(baseline, fresh)
+
+    def gate(metric: str, higher_better: bool, workload_bound: bool) -> None:
+        if metric not in baseline or metric not in fresh:
+            ok.append(f"skip {metric}: absent from "
+                      f"{'baseline' if metric not in baseline else 'fresh'}")
+            return
+        if workload_bound and not matched:
+            ok.append(f"skip {metric}: fresh run uses a different workload "
+                      "(workload-bound metric)")
+            return
+        b, f = float(baseline[metric]), float(fresh[metric])
+        if higher_better:
+            floor = b * (1.0 - tolerance)
+            line = (f"{metric}: fresh {f:.4g} vs baseline {b:.4g} "
+                    f"(floor {floor:.4g})")
+            (ok if f >= floor else bad).append(
+                line if f >= floor else f"REGRESSION {line}")
+        else:
+            ceil = b * (1.0 + tolerance)
+            line = (f"{metric}: fresh {f:.4g} vs baseline {b:.4g} "
+                    f"(ceiling {ceil:.4g})")
+            (ok if f <= ceil else bad).append(
+                line if f <= ceil else f"REGRESSION {line}")
+
+    gate("speedup", higher_better=True, workload_bound=True)
+    gate("host_syncs_per_flush_fused", higher_better=False,
+         workload_bound=False)
+    gate("classify_flops_saved_frac", higher_better=True,
+         workload_bound=True)
+    if "bit_identical" in fresh and not fresh["bit_identical"]:
+        bad.append("REGRESSION bit_identical: fused path no longer matches "
+                   "the sync baseline")
+    return ok, bad
+
+
+def run_check(baseline_path: str, fresh_path: str, tolerance: float) -> int:
+    ok, bad = compare(_load(baseline_path), _load(fresh_path), tolerance)
+    for line in ok:
+        print(f"  {line}")
+    for line in bad:
+        print(f"  {line}")
+    if bad:
+        print(f"# FAIL: {len(bad)} metric(s) regressed beyond "
+              f"{tolerance:.0%} vs {baseline_path}")
+        return 1
+    print(f"# PASS: no perf regression beyond {tolerance:.0%} vs "
+          f"{baseline_path}")
+    return 0
+
+
+def self_test(tolerance: float) -> int:
+    """Gate the gate: the checker must accept an identical run, accept
+    in-tolerance wobble, and reject a synthetically degraded one."""
+    base = {"speedup": 2.0, "host_syncs_per_flush_fused": 1.0,
+            "classify_flops_saved_frac": 0.6, "bit_identical": True,
+            "workload": {"streams": 8, "chunks_per_stream": 4}}
+    cases = [
+        ("identical", dict(base), False),
+        ("in-tolerance wobble", dict(base, speedup=2.0 * 0.85), False),
+        ("degraded speedup", dict(base, speedup=1.0), True),
+        ("sync crept back", dict(base, host_syncs_per_flush_fused=4.0),
+         True),
+        ("lost bit-identity", dict(base, bit_identical=False), True),
+        ("quick workload, bad syncs",
+         dict(base, host_syncs_per_flush_fused=4.0,
+              workload={"streams": 4, "chunks_per_stream": 2}), True),
+        ("quick workload, low speedup only",
+         dict(base, speedup=1.1,
+              workload={"streams": 4, "chunks_per_stream": 2}), False),
+    ]
+    failures = 0
+    for name, fresh, want_fail in cases:
+        _, bad = compare(base, fresh, tolerance)
+        got_fail = bool(bad)
+        verdict = "ok" if got_fail == want_fail else "SELF-TEST FAILURE"
+        print(f"  {verdict}: {name} -> "
+              f"{'rejected' if got_fail else 'accepted'}")
+        failures += got_fail != want_fail
+    if failures:
+        print(f"# FAIL: self-test — {failures} case(s) misjudged")
+        return 1
+    print("# PASS: regression gate rejects degraded results and accepts "
+          "healthy ones")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_e2e.json",
+                    help="committed baseline json")
+    ap.add_argument("--fresh", default="artifacts/BENCH_e2e.json",
+                    help="freshly measured json")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed relative regression (default 20%%)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate fails on synthetic degradations")
+    args = ap.parse_args()
+    if args.self_test:
+        raise SystemExit(self_test(args.tolerance))
+    raise SystemExit(run_check(args.baseline, args.fresh, args.tolerance))
+
+
+if __name__ == "__main__":
+    main()

@@ -217,6 +217,59 @@ def classify_compacted(clf_cfg: ClassifierConfig, pcfg: ProtocolConfig,
     return _merge_fog(pcfg, split, fog_scores, fog_feats)
 
 
+@functools.partial(jax.jit, static_argnames=("clf_cfg", "pcfg"))
+def classify_ensemble(clf_cfg: ClassifierConfig, pcfg: ProtocolConfig,
+                      clf_params, snaps: jax.Array, omega: jax.Array,
+                      frames_hq: jax.Array, split: reg.RegionSplit
+                      ) -> Dict[str, jax.Array]:
+    """fog.classify_ensemble — Eq. (9) snapshot-ensemble classify + merge.
+
+    The full-budget single-stream stage: every region slot is cropped, one
+    backbone pass feeds all T stacked snapshots, and the per-crop score is
+    the omega-weighted sigmoid combination.  With one snapshot and
+    omega=[1.0] the output is bitwise-identical to
+    :func:`classify_regions` — the multi-readout stage *contains* the
+    single-readout stage as its degenerate case, so serving can switch a
+    stream between them without a numerics boundary."""
+    crops = reg.crop_batch(frames_hq, split.prop_boxes, clf_cfg.crop_hw)
+    f, n = crops.shape[0], crops.shape[1]
+    flat = crops.reshape(f * n, *crops.shape[2:])
+    out = clf_mod.classify_ensemble(clf_cfg, clf_params, flat, snaps, omega)
+    mask = split.prop_valid[..., None]
+    fog_scores = jnp.where(mask, out["scores"].reshape(f, n, -1), 0.0)
+    fog_feats = jnp.where(mask, out["features"].reshape(f, n, -1), 0.0)
+    return _merge_fog(pcfg, split, fog_scores, fog_feats)
+
+
+@functools.partial(jax.jit, static_argnames=("clf_cfg", "pcfg"))
+def classify_compacted_ensemble(clf_cfg: ClassifierConfig,
+                                pcfg: ProtocolConfig, clf_params,
+                                snaps: jax.Array, omegas: jax.Array,
+                                frames_hq: jax.Array, split: reg.RegionSplit,
+                                idxs: jax.Array) -> Dict[str, jax.Array]:
+    """fog.classify_ensemble_batched — compacted cross-stream Eq. (9).
+
+    The ensemble twin of :func:`classify_compacted`: same (3, B) gather
+    plan (``widx`` now picks a per-stream snapshot *lineage* from ``snaps``
+    (G, T, d+1, C) with ridge weights ``omegas`` (G, T)), same
+    scatter-back into zero grids.  Lineages padded with zero snapshots and
+    zero omega stay bitwise-equal to their unpadded scores, so one flush
+    can mix streams with different snapshot counts — including plain
+    single-readout streams (T=1, omega=[1.0])."""
+    fidx, ridx, widx = idxs[0], idxs[1], idxs[2]
+    crops = reg.crop_batch(frames_hq, split.prop_boxes, clf_cfg.crop_hw)
+    gathered = crops[fidx, ridx]                    # (B, h, w, 3)
+    out = clf_mod.classify_ensemble_multi(clf_cfg, clf_params, gathered,
+                                          snaps, omegas, widx)
+    x, scores = out["features"], out["scores"]
+    f, n = split.prop_valid.shape
+    fog_scores = jnp.zeros((f, n, scores.shape[-1]), scores.dtype
+                           ).at[fidx, ridx].set(scores, mode="drop")
+    fog_feats = jnp.zeros((f, n, x.shape[-1]), x.dtype
+                          ).at[fidx, ridx].set(x, mode="drop")
+    return _merge_fog(pcfg, split, fog_scores, fog_feats)
+
+
 def assemble_result(split: reg.RegionSplit, merged: Dict[str, jax.Array],
                     *, wan_bytes: float, coord_bytes: float,
                     cloud_frames: int, latency: LatencyBreakdown

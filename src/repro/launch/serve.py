@@ -98,12 +98,15 @@ def serve_video(args) -> None:
                   "plane will stay in monitor state (run benchmarks first "
                   "to train, or see benchmarks/bench_drift_recovery.py)")
 
-        # continual-learning demo: the second half of each stream drifts
-        def _chunk(rng, j):
-            drift = 1.0 if j >= args.video_chunks // 2 else 0.0
+        # continual-learning demo: the second half of each stream drifts —
+        # with per-site learning only camera 0 drifts, so the demo shows a
+        # single-site episode leaving every other camera's readout alone
+        def _chunk(rng, i, j):
+            drifts = (i == 0) if args.per_site_learning else True
+            drift = 1.0 if drifts and j >= args.video_chunks // 2 else 0.0
             return synthetic.drifted_chunk(rng, "traffic", drift=drift,
                                            num_frames=args.video_frames)
-        streams = [[_chunk(np.random.default_rng(50 + i + 97 * j), j)
+        streams = [[_chunk(np.random.default_rng(50 + i + 97 * j), i, j)
                     for j in range(args.video_chunks)]
                    for i in range(args.video_streams)]
     else:
@@ -135,6 +138,10 @@ def serve_video(args) -> None:
         plane = ContinualLearningPlane(CLASSIFIER.num_classes, LearningConfig(
             label_budget=args.label_budget, sentinel_per_chunk=2,
             labels_per_round=16, min_batch=8, min_holdout=4,
+            per_site=args.per_site_learning,
+            ensemble_serving=args.ensemble_serving,
+            sentinel_mode=("active" if args.per_site_learning
+                           else "uniform"),
             drift=DriftConfig(window=min(args.drift_window, max(2, pre)),
                               warmup=max(2, pre // 2), patience=1,
                               threshold=0.4, cooldown=4)))
@@ -176,8 +183,18 @@ def serve_video(args) -> None:
               f"event(s), {s['labels_charged']}/{s['label_budget']} labels, "
               f"{s['trainer'].get('rounds', 0)} train round(s), "
               f"{s['promotions']} promotion(s), {s['rollbacks']} "
-              f"rollback(s), {s['hot_swaps']} hot-swap(s), live model "
-              f"v{s['live_version']}")
+              f"rollback(s), {s['hot_swaps']} hot-swap(s)"
+              + ("" if s["per_site"] else
+                 f", live model v{s['live_version']}"))
+        if s["per_site"]:
+            for name, site in sorted(s.get("sites", {}).items()):
+                print(f"    site {name} [{site['state']}]: "
+                      f"{site['episodes']} episode(s), "
+                      f"{site['promotions']} promotion(s), "
+                      f"{site['ensemble_promotions']} ensemble "
+                      f"promotion(s), live v{site['live_version']}, "
+                      f"{s['sentinel_by_stream'].get(name, 0)} sentinel "
+                      f"label(s)")
     for name, r in list(out.items())[:3]:
         print(f"  {name}: wan {r.bandwidth/1e3:.1f} kB, cost "
               f"{r.cloud_cost:.0f}, mean latency "
@@ -223,11 +240,26 @@ def main() -> None:
                          "detection, budgeted labeling, background "
                          "training, fog-model hot-swap) and inject drift "
                          "into the second half of each stream")
+    ap.add_argument("--per-site-learning", action="store_true",
+                    help="per-camera learning lineages: a drift episode in "
+                         "one stream trains, shadow-evaluates, and "
+                         "hot-swaps only that stream's readout (drift is "
+                         "then injected into camera 0 only); sentinel "
+                         "spot-checks are actively scheduled by per-stream "
+                         "health uncertainty")
+    ap.add_argument("--ensemble-serving", action="store_true",
+                    help="at episode close, serve the Eq. 9 snapshot "
+                         "ensemble (fog.classify_ensemble) when it beats "
+                         "the latest promoted readout on the holdout")
     ap.add_argument("--label-budget", type=int, default=256,
                     help="human labor budget tau for the learning plane")
     ap.add_argument("--drift-window", type=int, default=8,
                     help="EWMA span (observations) of the drift detector")
     args = ap.parse_args()
+    if args.per_site_learning or args.ensemble_serving:
+        # both flags configure the learning plane; without it they would
+        # silently do nothing
+        args.learning = True
 
     if args.video_streams > 0:
         serve_video(args)

@@ -8,7 +8,8 @@ runs *beside* it, closing the paper's human-feedback loop online:
   drift -> label (budget tau, most-uncertain-first) -> train (Eq. 8/4)
         -> shadow-eval vs holdout replay -> promote / rollback -> hot-swap
 """
-from repro.learning.drift import DriftConfig, DriftDetector, DriftEvent
+from repro.learning.drift import (DriftConfig, DriftDetector, DriftEvent,
+                                  HealthPosterior)
 from repro.learning.labeling import LabelCandidate, LabelingQueue
 from repro.learning.plane import ContinualLearningPlane, LearningConfig
 from repro.learning.promotion import (PromotionGate, ReplayBuffer,
@@ -17,6 +18,7 @@ from repro.learning.trainer import BackgroundTrainer
 
 __all__ = [
     "BackgroundTrainer", "ContinualLearningPlane", "DriftConfig",
-    "DriftDetector", "DriftEvent", "LabelCandidate", "LabelingQueue",
-    "LearningConfig", "PromotionGate", "ReplayBuffer", "ShadowEvaluator",
+    "DriftDetector", "DriftEvent", "HealthPosterior", "LabelCandidate",
+    "LabelingQueue", "LearningConfig", "PromotionGate", "ReplayBuffer",
+    "ShadowEvaluator",
 ]

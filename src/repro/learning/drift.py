@@ -21,6 +21,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+import numpy as np
+
 
 @dataclass(frozen=True)
 class DriftConfig:
@@ -29,6 +31,13 @@ class DriftConfig:
     threshold: float = 0.15  # relative drop vs baseline that counts as drift
     patience: int = 2        # consecutive below-threshold obs before firing
     cooldown: int = 6        # observations an event suppresses further events
+    # recovery bar as a fraction of baseline (None = halfway back inside
+    # the drift threshold).  Decoupled from ``threshold`` because the two
+    # pull opposite ways: a *detection* trip-wire must sit well below the
+    # noise floor of the sentinel statistic, while an *episode-close* bar
+    # (per-site adaptation stops drawing budget at recovery) can demand
+    # nearly full restoration
+    recover_frac: Optional[float] = None
 
     @property
     def alpha(self) -> float:
@@ -54,6 +63,59 @@ class _StreamDrift:
     below: int = 0           # consecutive below-threshold observations
     below_since: float = 0.0
     cooldown_left: int = 0
+
+
+@dataclass
+class _StreamHealth:
+    a: float = 1.0               # Beta pseudo-count: correct verdicts
+    b: float = 1.0               # Beta pseudo-count: wrong verdicts
+
+
+class HealthPosterior:
+    """Per-stream Beta posterior over sentinel-verdict correctness.
+
+    The active sentinel scheduler spends oracle spot-checks where it is
+    *least certain* about a stream's health, and the posterior standard
+    deviation is that certainty: a stream with many consistent verdicts
+    concentrates (low std, few checks buy little information); a stream
+    with mixed verdicts — or one not checked for a while — stays or drifts
+    back toward the flat prior (high std).  ``decay`` shrinks the
+    pseudo-counts toward Beta(1, 1) once per observed chunk, so certainty
+    is perishable and no stream is starved of checks forever."""
+
+    def __init__(self, decay: float = 0.97):
+        self.decay = decay
+        self._streams: Dict[str, _StreamHealth] = {}
+
+    def _state(self, stream: str) -> _StreamHealth:
+        return self._streams.setdefault(stream, _StreamHealth())
+
+    def observe_chunk(self, stream: str) -> None:
+        """One chunk elapsed on ``stream``: age its pseudo-counts."""
+        st = self._state(stream)
+        st.a = 1.0 + (st.a - 1.0) * self.decay
+        st.b = 1.0 + (st.b - 1.0) * self.decay
+
+    def update(self, stream: str, correct: bool) -> None:
+        st = self._state(stream)
+        if correct:
+            st.a += 1.0
+        else:
+            st.b += 1.0
+
+    def mean(self, stream: str) -> float:
+        st = self._state(stream)
+        return st.a / (st.a + st.b)
+
+    def std(self, stream: str) -> float:
+        """Posterior standard deviation (unseen streams: the flat prior's
+        maximum, so new streams are checked first)."""
+        st = self._state(stream)
+        n = st.a + st.b
+        return float(np.sqrt(st.a * st.b / (n * n * (n + 1.0))))
+
+    def streams(self) -> List[str]:
+        return list(self._streams)
 
 
 class DriftDetector:
@@ -83,11 +145,14 @@ class DriftDetector:
         st.cooldown_left = 0
 
     def recovered(self, stream: str) -> bool:
-        """EWMA back above half the drift threshold below baseline."""
+        """EWMA back above the recovery bar (default: half the drift
+        threshold below baseline)."""
         st = self._state(stream)
         if st.baseline is None or st.ewma is None:
             return False
-        return st.ewma >= st.baseline * (1.0 - 0.5 * self.cfg.threshold)
+        frac = (self.cfg.recover_frac if self.cfg.recover_frac is not None
+                else 1.0 - 0.5 * self.cfg.threshold)
+        return st.ewma >= st.baseline * frac
 
     def observe(self, stream: str, stat: float, t: float = 0.0
                 ) -> Optional[DriftEvent]:

@@ -23,7 +23,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.incremental import eval_accuracy
+from repro.core.incremental import ensemble_accuracy, eval_accuracy
 
 
 class ReplayBuffer:
@@ -44,11 +44,24 @@ class ReplayBuffer:
             self._labels.pop(0)
             self._ts.pop(0)
 
-    def drop_older_than(self, t: float) -> int:
+    def drop_older_than(self, t: float,
+                        into: Optional["ReplayBuffer"] = None) -> int:
         """Drop pre-drift holdout samples: the gate must judge candidates
-        against the distribution the live model currently serves."""
+        against the distribution the live model currently serves.
+
+        ``into`` receives the dropped samples instead of discarding them —
+        the learning plane archives the old regime's labels there so the
+        Eq. 9 ensemble (whose whole point is spanning regimes) can still
+        be fit and judged on data the single-readout gate rightly
+        ignores.  Nothing is re-charged: these labels were already paid
+        for."""
         keep = [i for i, ti in enumerate(self._ts) if ti >= t]
         dropped = len(self._ts) - len(keep)
+        if into is not None:
+            kept = set(keep)
+            for i in range(len(self._ts)):
+                if i not in kept:
+                    into.add(self._xs[i], self._labels[i], t=self._ts[i])
         self._xs = [self._xs[i] for i in keep]
         self._labels = [self._labels[i] for i in keep]
         self._ts = [self._ts[i] for i in keep]
@@ -75,6 +88,14 @@ class ShadowEvaluator:
         xs, labels = self.holdout.data()
         return eval_accuracy(W, xs, labels)
 
+    def score_ensemble(self, snaps, omega) -> float:
+        """Holdout accuracy of the Eq. (9) snapshot ensemble."""
+        xs, labels = self.holdout.data()
+        if not len(xs):
+            return 0.0
+        return ensemble_accuracy(np.asarray(snaps), np.asarray(omega),
+                                 xs, labels)
+
 
 @dataclass
 class PromotionGate:
@@ -100,6 +121,35 @@ class PromotionGate:
                    and cand > 0.0)
         rec = {"t": t, "holdout": n, "live_score": live,
                "cand_score": cand, "promote": promote}
+        self.decisions.append(rec)
+        return rec
+
+    def evaluate_ensemble(self, live_W, snaps, omega, t: float = 0.0,
+                          extra=None) -> Dict:
+        """Gate the Eq. (9) ensemble against the latest promoted readout.
+
+        Same invariants as :meth:`evaluate` — enough holdout, and the
+        ensemble must not score *below* the live single readout (serving
+        it on a tie is safe: its degenerate case is the live readout) —
+        but scored on the holdout PLUS the ``extra`` (xs, labels) archive
+        of pre-episode samples.  The single-readout gate judges candidates
+        on the regime the model currently serves; the ensemble's whole
+        point is robustness across the regimes the site has *ever*
+        served, so it is judged on that union."""
+        xs, labels = self.evaluator.holdout.data()
+        if extra is not None and len(extra[0]):
+            xs = np.concatenate([xs, np.asarray(extra[0], xs.dtype)]) \
+                if len(xs) else np.asarray(extra[0])
+            labels = np.concatenate([labels,
+                                     np.asarray(extra[1], np.int64)])
+        n = len(self.evaluator.holdout)
+        live = eval_accuracy(live_W, xs, labels)
+        ens = ensemble_accuracy(np.asarray(snaps), np.asarray(omega),
+                                xs, labels)
+        promote = n >= self.min_holdout and ens >= live and ens > 0.0
+        rec = {"t": t, "holdout": n, "eval_samples": int(len(xs)),
+               "live_score": live, "ens_score": ens, "promote": promote,
+               "snapshots": int(np.asarray(snaps).shape[0])}
         self.decisions.append(rec)
         return rec
 

@@ -51,6 +51,8 @@ class BackgroundTrainer:
     omega: Optional[np.ndarray] = None
     buffer: ReplayBuffer = None
     _fresh: int = 0
+    _ens_snapshots: Optional[np.ndarray] = None
+    seed_version: Optional[int] = None
 
     def __post_init__(self):
         if self.buffer is None:
@@ -60,6 +62,19 @@ class BackgroundTrainer:
                     t: float = 0.0) -> None:
         self.buffer.add(x, label, t=t)
         self._fresh += 1
+
+    def seed_snapshot(self, W, version: Optional[int] = None) -> None:
+        """Anchor a drift episode's *starting* readout as snapshot W_0.
+
+        Eq. (9)'s snapshot set {W_t} spans the adaptation trajectory from
+        the pre-episode model onward; without the anchor the ensemble can
+        only mix post-drift candidates and loses the old regime entirely —
+        exactly the regime a site that oscillates between appearances
+        needs back.  Called at episode entry; resets the lineage so each
+        episode's ensemble is fit over its own trajectory."""
+        self.snapshots = [np.asarray(W)]
+        self.seed_version = version if version is not None else 0
+        self.snapshot_versions = [self.seed_version]
 
     def drop_older_than(self, t: float) -> int:
         """Invalidate labels collected before ``t`` (a drift event makes
@@ -100,8 +115,6 @@ class BackgroundTrainer:
         self.train_time_s += (self.per_label_train_s * len(self.buffer)
                               * max(self.passes, 1))
         self._fresh = 0
-        self.snapshots.append(W_new)
-        self.snapshots = self.snapshots[-self.keep_snapshots:]
         ts = self.buffer.times()
         rec = self.zoo.register_version(
             self.model_name, {"W": W_new},
@@ -111,19 +124,63 @@ class BackgroundTrainer:
                      "labels": fresh_cost,
                      "replayed": len(self.buffer),
                      "rule": self.rule, "round": self.rounds})
+        self.snapshots.append(W_new)
         self.snapshot_versions.append(rec.version)
-        self.snapshot_versions = self.snapshot_versions[-self.keep_snapshots:]
+        if len(self.snapshots) > self.keep_snapshots:
+            if (self.seed_version is not None
+                    and self.keep_snapshots >= 2
+                    and self.snapshot_versions[0] == self.seed_version):
+                # a seeded episode pins its anchor W_0: the rolling window
+                # trims the middle, never the regime the ensemble must keep
+                head = self.keep_snapshots - 1
+                self.snapshots = [self.snapshots[0]] + self.snapshots[-head:]
+                self.snapshot_versions = ([self.snapshot_versions[0]]
+                                          + self.snapshot_versions[-head:])
+            else:
+                self.snapshots = self.snapshots[-self.keep_snapshots:]
+                self.snapshot_versions = (
+                    self.snapshot_versions[-self.keep_snapshots:])
         return rec
 
-    def fit_ensemble(self, v: float = 1e-2) -> Optional[np.ndarray]:
+    def fit_ensemble(self, v: float = 1e-2, versions: Optional[set] = None,
+                     extra=None) -> Optional[np.ndarray]:
         """Eq. (9) ridge weights over the kept snapshots (reusing the
-        buffered labelled data, as §V prescribes)."""
-        if len(self.snapshots) < 2 or not len(self.buffer):
+        buffered labelled data, as §V prescribes).
+
+        ``versions`` restricts the snapshot set by zoo version — the plane
+        passes the episode's *promoted* lineage (plus the seed anchor W_0)
+        so the ensemble mixes only models that earned serving through the
+        gate; ridge-fitting over rejected candidates dilutes it with
+        components that already lost on the holdout.  ``extra`` appends an
+        archived (xs, labels) slice from *before* the episode, so omega
+        balances the snapshots across both regimes instead of collapsing
+        onto whatever the current buffer holds."""
+        keep = [i for i, ver in enumerate(self.snapshot_versions)
+                if versions is None or ver in versions]
+        if len(keep) < 2 or not len(self.buffer):
+            self.omega = None
+            self._ens_snapshots = None
             return None
         xs, ys = self._training_arrays()
-        snaps = jnp.asarray(np.stack(self.snapshots))
+        if extra is not None and len(extra[0]):
+            ex = np.asarray(extra[0], np.float32)
+            ey = np.zeros((len(extra[1]), self.num_classes), np.float32)
+            ey[np.arange(len(extra[1])), np.asarray(extra[1], int)] = 1.0
+            xs = jnp.concatenate([xs, jnp.asarray(ex)])
+            ys = jnp.concatenate([ys, jnp.asarray(ey)])
+        picked = [self.snapshots[i] for i in keep]
+        snaps = jnp.asarray(np.stack(picked))
         self.omega = np.asarray(ensemble_weights(snaps, xs, ys, v=v))
+        self._ens_snapshots = np.stack(picked)
         return self.omega
+
+    def ensemble(self) -> Optional[tuple]:
+        """(stacked snapshots (T, d+1, C), omega (T,)) once fit, else None
+        — the servable Eq. (9) artifact for ``hot_swap_ensemble``."""
+        snaps = getattr(self, "_ens_snapshots", None)
+        if self.omega is None or snaps is None:
+            return None
+        return snaps, np.asarray(self.omega)
 
     def summary(self) -> Dict[str, Any]:
         return {"rounds": self.rounds, "labels_consumed": self.labels_consumed,

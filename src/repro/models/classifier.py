@@ -81,6 +81,43 @@ def classify_multi(cfg: ClassifierConfig, params, crops: jax.Array,
     return {"features": x, "scores": scores}
 
 
+def classify_ensemble(cfg: ClassifierConfig, params, crops: jax.Array,
+                      snaps: jax.Array, omega: jax.Array
+                      ) -> Dict[str, jax.Array]:
+    """Eq. (9) snapshot-ensemble scores over one stream's readout lineage.
+
+    ``snaps`` stacks T readout snapshots (T, feature_dim + 1, C) and
+    ``omega`` (T,) holds their ridge ensemble weights; the combined score
+    is sum_t omega_t * sigmoid(x @ W_t) — the serving-side counterpart of
+    :func:`repro.core.incremental.ensemble_predict`, sharing one backbone
+    pass across all snapshots.  The degenerate single-snapshot case
+    (T=1, omega=[1.0]) is bitwise-identical to :func:`classify`: the unit
+    reduction adds nothing and multiplying by exactly 1.0 is exact.
+    """
+    x = features(cfg, params, crops)
+    z = jax.nn.sigmoid(jnp.einsum("bd,tdc->btc", x, snaps))
+    scores = jnp.einsum("t,btc->bc", omega, z)
+    return {"features": x, "scores": scores}
+
+
+def classify_ensemble_multi(cfg: ClassifierConfig, params, crops: jax.Array,
+                            snaps: jax.Array, omegas: jax.Array,
+                            widx: jax.Array) -> Dict[str, jax.Array]:
+    """Per-crop ensemble selection: the cross-stream compacted variant.
+
+    ``snaps`` stacks G per-stream snapshot lineages (G, T, feature_dim + 1,
+    C) — lineages shorter than T are padded with zero snapshots whose
+    ``omegas`` entry is 0.0, which adds exactly 0.0 to the combination and
+    keeps shorter lineages bitwise-unchanged — and ``widx`` (b,) picks crop
+    b's lineage.  With T=1 and omega=1 this is bitwise-identical to
+    :func:`classify_multi` per row.
+    """
+    x = features(cfg, params, crops)
+    z = jax.nn.sigmoid(jnp.einsum("bd,btdc->btc", x, snaps[widx]))
+    scores = jnp.einsum("bt,btc->bc", omegas[widx], z)
+    return {"features": x, "scores": scores}
+
+
 def classifier_loss(cfg: ClassifierConfig, params, crops: jax.Array,
                     labels: jax.Array) -> Tuple[jax.Array, Dict]:
     """One-vs-all BCE over all binary heads (backbone pre-training)."""

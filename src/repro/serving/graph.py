@@ -80,10 +80,13 @@ STAGE_DETECT = "cloud.detect"
 STAGE_DETECT_SPLIT = "cloud.detect_split"      # fused detect + §IV.B split
 STAGE_CLASSIFY = "fog.classify_regions"
 STAGE_CLASSIFY_BATCH = "fog.classify_batched"  # compacted cross-stream
+STAGE_CLASSIFY_ENS = "fog.classify_ensemble"   # Eq. 9 snapshot ensemble
+STAGE_CLASSIFY_ENS_BATCH = "fog.classify_ensemble_batched"
 STAGE_CLASSIFY_VIEW = "fog.classify_view"      # per-stream slice accounting
 STAGE_COLLECT = "hitl.collect"
 STAGES = (STAGE_ENCODE, STAGE_DETECT, STAGE_DETECT_SPLIT, STAGE_CLASSIFY,
-          STAGE_CLASSIFY_BATCH, STAGE_CLASSIFY_VIEW, STAGE_COLLECT)
+          STAGE_CLASSIFY_BATCH, STAGE_CLASSIFY_ENS, STAGE_CLASSIFY_ENS_BATCH,
+          STAGE_CLASSIFY_VIEW, STAGE_COLLECT)
 
 
 # ---------------------------------------------------------------------------
@@ -111,6 +114,12 @@ class VideoFunctionGraph:
                                kind="inference", tier="fog")
         self.registry.register(STAGE_CLASSIFY_BATCH, self._classify_batched,
                                kind="inference", tier="fog", batchable=True)
+        self.registry.register(STAGE_CLASSIFY_ENS, self._classify_ensemble,
+                               kind="inference", tier="fog", ensemble=True)
+        self.registry.register(STAGE_CLASSIFY_ENS_BATCH,
+                               self._classify_ensemble_batched,
+                               kind="inference", tier="fog", batchable=True,
+                               ensemble=True)
         # accounting stage: a fog node's share of the batched classify is a
         # lazy device-side slice of the shared result (no compute)
         self.registry.register(STAGE_CLASSIFY_VIEW, lambda views: views,
@@ -124,6 +133,7 @@ class VideoFunctionGraph:
         self.dispatcher.dispatch("cloud", STAGE_DETECT_SPLIT)
         self.dispatcher.dispatch("cloud", "cloud-detector")
         for name in (STAGE_ENCODE, STAGE_CLASSIFY, STAGE_CLASSIFY_BATCH,
+                     STAGE_CLASSIFY_ENS, STAGE_CLASSIFY_ENS_BATCH,
                      STAGE_CLASSIFY_VIEW, STAGE_COLLECT, "fog-classifier"):
             self.dispatcher.dispatch("fog", name)
 
@@ -150,6 +160,17 @@ class VideoFunctionGraph:
         return protocol_mod.classify_regions(
             self.protocol.clf_cfg, self.protocol.pcfg, self.clf_params, W,
             frames_hq, split)
+
+    def _classify_ensemble(self, frames_hq, split, snaps, omega):
+        return protocol_mod.classify_ensemble(
+            self.protocol.clf_cfg, self.protocol.pcfg, self.clf_params,
+            snaps, omega, frames_hq, split)
+
+    def _classify_ensemble_batched(self, frames_hq, split, snaps, omegas,
+                                   idxs):
+        return protocol_mod.classify_compacted_ensemble(
+            self.protocol.clf_cfg, self.protocol.pcfg, self.clf_params,
+            snaps, omegas, frames_hq, split, idxs)
 
     def _collect(self, stream: "StreamState", chunk, res: ChunkResult) -> int:
         """HITL feedback for one finished chunk; returns 1 on a W update."""
@@ -200,6 +221,14 @@ class StreamState:
     att_ewma: float = 1.0
     pending: Deque[Tuple[Any, bool]] = field(default_factory=deque)
     results: List[Tuple[Any, ChunkResult, str]] = field(default_factory=list)
+    # Eq. 9 ensemble serving: when set, the stream's classify stage scores
+    # crops against the whole snapshot lineage (snaps (T, d+1, C) weighted
+    # by omega (T,)) instead of the single readout W.  ``W`` stays the
+    # latest-snapshot readout — the learning plane keeps rescoring label
+    # candidates against it — and a later W hot-swap supersedes (clears)
+    # the ensemble.
+    snaps: Optional[np.ndarray] = None
+    omega: Optional[np.ndarray] = None
     # device-resident readout cache: W is uploaded once and re-uploaded only
     # when the host-side array object changes (hot-swap / learner update),
     # not per chunk.  Identity tracking rather than a setter keeps every
@@ -207,6 +236,9 @@ class StreamState:
     w_uploads: int = 0
     _W_dev: Any = None
     _W_src: Any = None
+    e_uploads: int = 0
+    _E_dev: Any = None
+    _E_src: Any = None
 
     def W_device(self):
         if self._W_dev is None or self._W_src is not self.W:
@@ -214,6 +246,103 @@ class StreamState:
             self._W_src = self.W
             self.w_uploads += 1
         return self._W_dev
+
+    @property
+    def ensemble(self) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        if self.snaps is None:
+            return None
+        return self.snaps, self.omega
+
+    def set_ensemble(self, snaps, omega) -> None:
+        snaps = np.asarray(snaps)
+        omega = np.asarray(omega, snaps.dtype)
+        assert snaps.ndim == 3 and omega.shape == (snaps.shape[0],)
+        self.snaps, self.omega = snaps, omega
+
+    def clear_ensemble(self) -> None:
+        self.snaps = self.omega = None
+        self._E_dev = self._E_src = None
+
+    def ensemble_device(self):
+        """(snaps, omega) uploaded once per set_ensemble, identity-cached
+        like ``W_device``."""
+        if self._E_dev is None or self._E_src is not self.snaps:
+            self._E_dev = (jnp.asarray(self.snaps), jnp.asarray(self.omega))
+            self._E_src = self.snaps
+            self.e_uploads += 1
+        return self._E_dev
+
+
+# ---------------------------------------------------------------------------
+# Per-field lazy flush results
+# ---------------------------------------------------------------------------
+class _FlushBundle:
+    """One flush's device-side results, materialized per *field* on demand.
+
+    A field's first access downloads its device buffer once for the whole
+    flush (id-deduped: the detector boxes back ``acc_boxes`` AND
+    ``merged["boxes"]`` — one buffer, one copy); every chunk then slices
+    numpy views.  Fields nothing reads are never downloaded — a HITL-off
+    run finalizes without ever paying for ``fog_features``."""
+
+    def __init__(self, split, merged, stats: dict, field_downloads: dict):
+        self.split, self.merged = split, merged
+        self._stats = stats
+        self._field_downloads = field_downloads
+        self._cache: Dict[int, np.ndarray] = {}
+        self._touched = False
+
+    def field(self, name: str) -> np.ndarray:
+        src = (self.merged[name] if name in self.merged
+               else getattr(self.split, name))
+        if isinstance(src, np.ndarray):
+            return src                 # already materialized + swapped in
+        arr = self._cache.get(id(src))
+        if arr is None:
+            arr = self._cache[id(src)] = np.asarray(src)
+            self._field_downloads[name] = (
+                self._field_downloads.get(name, 0) + 1)
+            if not self._touched:
+                self._touched = True
+                self._stats["result_downloads"] += 1
+        if name in self.merged:
+            # swap the host copy in for the device ref so the downloaded
+            # buffer can free — the big per-flush grids (fog_features,
+            # fog_scores) live only in ``merged``; split fields stay
+            # device-side because the RegionSplit tuple aliases them
+            self.merged[name] = arr
+        return arr
+
+
+class LazyChunkResult:
+    """Duck-typed :class:`~repro.core.protocol.ChunkResult` whose array
+    fields materialize from the flush bundle on first attribute access.
+
+    Scalars (bytes, latency, frame counts) are eager — the scheduler's
+    bookkeeping reads them on the finalize path — while the arrays stay
+    device-side until a consumer (F1 evaluation, the learning plane, a
+    test) actually touches them.  Once read, the numpy slice is cached on
+    the instance, so repeated access costs one dict hit."""
+
+    _ARRAY_FIELDS = frozenset((
+        "boxes", "labels", "valid", "source", "fog_features", "fog_scores",
+        "prop_boxes", "prop_valid"))
+
+    def __init__(self, bundle: _FlushBundle, sl: slice, *, wan_bytes: float,
+                 coord_bytes: float, cloud_frames: int, latency):
+        self._bundle, self._sl = bundle, sl
+        self.wan_bytes = float(wan_bytes)
+        self.coord_bytes = float(coord_bytes)
+        self.cloud_frames = cloud_frames
+        self.latency = latency
+
+    def __getattr__(self, name: str):
+        # only reached when normal lookup misses: the lazy array fields
+        if name not in LazyChunkResult._ARRAY_FIELDS:
+            raise AttributeError(name)
+        val = self._bundle.field(name)[self._sl]
+        setattr(self, name, val)        # cache: __getattr__ never re-fires
+        return val
 
 
 # ---------------------------------------------------------------------------
@@ -307,6 +436,16 @@ class GraphScheduler:
         # shared executor for the compacted cross-stream classify call (the
         # per-stream share is accounted on each stream's own fog executor)
         self.fog_batch_exec = Executor("fog-batch", graph.registry, proto.fog)
+        # bounded memo for the stacked ensemble upload, keyed on the
+        # flush's readout-group composition: deadline-driven batching
+        # produces a handful of recurring flush mixes, each of which
+        # should upload its (snaps, omegas) device stack once.  Values
+        # hold strong refs to the source arrays, so an id in a live key
+        # can never be recycled.  A hot-swap changes a source's identity
+        # and naturally misses.
+        self._ens_cache: Dict[Tuple[int, ...],
+                              Tuple[List[Any], Tuple[Any, Any]]] = {}
+        self._ens_cache_cap = 16
         # device-side results awaiting materialization at their finalize
         # event — the in-flight future queue that lets flush k's detect
         # overlap flush k-1's host-side result handling
@@ -317,7 +456,12 @@ class GraphScheduler:
         # result_downloads)
         self.hot_path_stats = {"flushes": 0, "host_syncs": 0,
                                "result_downloads": 0, "crops_classified": 0,
-                               "crops_budget": 0, "inflight_peak": 0}
+                               "crops_budget": 0, "inflight_peak": 0,
+                               "ensemble_flushes": 0, "ensemble_uploads": 0}
+        # per-field result download counts (fused path): the lazy-bundle
+        # regression ledger — a HITL-off run must show zero fog_features /
+        # fog_scores downloads here
+        self.field_downloads: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
     def add_stream(self, name: str, *, W, learner=None, annotator=None,
@@ -560,10 +704,17 @@ class GraphScheduler:
             chunk = req.meta["chunk"]
             self.hot_path_stats["crops_classified"] += split.prop_valid.size
             self.hot_path_stats["crops_budget"] += split.prop_valid.size
-            merged, _ = stream.fog_exec.run(
-                STAGE_CLASSIFY, jnp.asarray(chunk.frames), split,
-                jnp.asarray(stream.W), now=done + wan_down,
-                model_time=clf_time)
+            if stream.ensemble is not None:
+                snaps_dev, omega_dev = stream.ensemble_device()
+                merged, _ = stream.fog_exec.run(
+                    STAGE_CLASSIFY_ENS, jnp.asarray(chunk.frames), split,
+                    snaps_dev, omega_dev, now=done + wan_down,
+                    model_time=clf_time)
+            else:
+                merged, _ = stream.fog_exec.run(
+                    STAGE_CLASSIFY, jnp.asarray(chunk.frames), split,
+                    jnp.asarray(stream.W), now=done + wan_down,
+                    model_time=clf_time)
             lat = LatencyBreakdown(
                 quality_control=req.meta["qc"],
                 transmission=req.meta["wan_up"] + wan_down,
@@ -626,18 +777,18 @@ class GraphScheduler:
             hq_batch = jnp.asarray(np.concatenate(
                 [np.asarray(r.meta["chunk"].frames) for r in reqs], axis=0))
         w_group: Dict[int, int] = {}
-        ws_list: List[Any] = []
+        group_streams: List[StreamState] = []
         req_w = np.empty(len(reqs), np.int32)
         frame_req = np.empty(f_real, np.int32)
+        use_ens = any(r.stream.snaps is not None for r in reqs)
         for qi, (r, sl) in enumerate(zip(reqs, slices)):
-            key = id(r.stream.W)
+            key = (id(r.stream.snaps) if r.stream.snaps is not None
+                   else id(r.stream.W))
             if key not in w_group:
-                w_group[key] = len(ws_list)
-                ws_list.append(r.stream.W_device())
+                w_group[key] = len(group_streams)
+                group_streams.append(r.stream)
             req_w[qi] = w_group[key]
             frame_req[sl] = qi
-        Ws = (ws_list[0][None] if len(ws_list) == 1
-              else jnp.stack(ws_list))
         # one (3, B) index upload: (fidx, ridx, widx) rows
         idxs = np.zeros((3, bucket), np.int32)
         idxs[0] = fidx
@@ -645,16 +796,32 @@ class GraphScheduler:
         if n_valid:
             idxs[2, :n_valid] = req_w[frame_req[fidx[:n_valid]]]
 
-        merged, _ = self.fog_batch_exec.run(
-            STAGE_CLASSIFY_BATCH, hq_batch, split_real, Ws,
-            jnp.asarray(idxs),
-            now=done, model_time=proto.fog.classify_time(max(n_valid, 1)))
+        clf_time = proto.fog.classify_time(max(n_valid, 1))
+        if use_ens:
+            # Eq. 9 ensemble serving: widx picks a per-stream snapshot
+            # lineage; plain single-readout streams ride along as the
+            # zero-padded degenerate lineage [W] / omega=[1.0] (bitwise-
+            # identical scores, see classify_compacted_ensemble)
+            snaps_dev, omegas_dev = self._ensemble_stack(group_streams)
+            self.hot_path_stats["ensemble_flushes"] += 1
+            merged, _ = self.fog_batch_exec.run(
+                STAGE_CLASSIFY_ENS_BATCH, hq_batch, split_real, snaps_dev,
+                omegas_dev, jnp.asarray(idxs), now=done,
+                model_time=clf_time)
+        else:
+            ws_list = [s.W_device() for s in group_streams]
+            Ws = (ws_list[0][None] if len(ws_list) == 1
+                  else jnp.stack(ws_list))
+            merged, _ = self.fog_batch_exec.run(
+                STAGE_CLASSIFY_BATCH, hq_batch, split_real, Ws,
+                jnp.asarray(idxs), now=done, model_time=clf_time)
 
-        # the whole flush's results travel as ONE device-side bundle; the
-        # first finalize event that needs it materializes the full arrays
-        # in a single host read and every chunk then slices numpy views —
-        # no per-chunk device-slice dispatches, no per-chunk downloads
-        bundle = dict(split=split_real, merged=merged, np=None)
+        # the whole flush's results travel as ONE device-side bundle whose
+        # fields materialize lazily: a consumer's first touch of a field
+        # downloads that buffer once for the whole flush and every chunk
+        # slices numpy views — fields nothing reads are never downloaded
+        bundle = _FlushBundle(split_real, merged, self.hot_path_stats,
+                              self.field_downloads)
         for req, sl in zip(reqs, slices):
             n_crops = int(counts[sl].sum())
             coord_bytes = 9.0 * n_crops
@@ -676,56 +843,29 @@ class GraphScheduler:
                 cloud_inference=svc,
                 fog_inference=clf_time,
                 queue_wait=max(0.0, start - req.arrival))
-            pending = dict(
-                bundle=bundle, sl=sl, wan_bytes=req.meta["wan_bytes"],
+            res = LazyChunkResult(
+                bundle, sl, wan_bytes=req.meta["wan_bytes"],
                 coord_bytes=coord_bytes,
                 cloud_frames=req.frames.shape[0], latency=lat)
-            self._inflight.append(pending)
+            self._inflight.append(res)
             self.hot_path_stats["inflight_peak"] = max(
                 self.hot_path_stats["inflight_peak"], len(self._inflight))
             self._push(req.meta["t0"] + lat.total, "finalize",
-                       dict(stream=stream, chunk=chunk, pending=pending,
-                            mode="cloud", learn=req.meta["learn"],
-                            t0=req.meta["t0"]))
+                       dict(stream=stream, chunk=chunk, res=res,
+                            inflight=True, mode="cloud",
+                            learn=req.meta["learn"], t0=req.meta["t0"]))
 
     def _finalize(self, t: float, data: dict) -> None:
         stream, chunk = data["stream"], data["chunk"]
-        res = data.get("res")
-        if res is None:
-            # drain the in-flight future: the flush's device-side bundle
-            # materializes to numpy on its first finalize (one host read
-            # for the whole flush), so the device ran ahead on later
-            # flushes while these results waited for their events
-            pending = data["pending"]
-            bundle = pending["bundle"]
-            if bundle["np"] is None:
-                # id-dedup: the detector boxes appear as acc_boxes,
-                # prop_boxes AND merged["boxes"] — one buffer, one download
-                cache: Dict[int, np.ndarray] = {}
-
-                def _np(v):
-                    r = cache.get(id(v))
-                    if r is None:
-                        r = cache[id(v)] = np.asarray(v)
-                    return r
-
-                bundle["np"] = (
-                    reg.RegionSplit(*(_np(v) for v in bundle["split"])),
-                    {k: _np(v) for k, v in bundle["merged"].items()})
-                self.hot_path_stats["result_downloads"] += 1
-            split_np, merged_np = bundle["np"]
-            sl = pending["sl"]
-            res = data["res"] = protocol_mod.assemble_result(
-                reg.RegionSplit(*(v[sl] for v in split_np)),
-                {k: v[sl] for k, v in merged_np.items()},
-                wan_bytes=pending["wan_bytes"],
-                coord_bytes=pending["coord_bytes"],
-                cloud_frames=pending["cloud_frames"],
-                latency=pending["latency"])
-            # identity scan, not deque.remove: == on dicts of device arrays
-            # would trigger ambiguous elementwise comparison
+        res = data["res"]
+        if data.get("inflight"):
+            # retire the in-flight future: its arrays stay device-side in
+            # the flush bundle until a consumer touches a field, so the
+            # device ran ahead on later flushes while this result waited
+            # for its event.  Identity scan, not deque.remove: == on lazy
+            # results would trigger attribute materialization.
             for i, p in enumerate(self._inflight):
-                if p is pending:
+                if p is res:
                     del self._inflight[i]
                     break
         t0 = data["t0"]
@@ -761,21 +901,97 @@ class GraphScheduler:
         self._pull_next(stream)
 
     # ------------------------------------------------------------------
-    def hot_swap(self, W, *, version=None, t: Optional[float] = None) -> int:
-        """Swap a new fog-classifier readout into every live stream's
-        ``fog.classify_regions`` stage, mid-run and without stalling.
+    def _ensemble_stack(self, group_streams: List[StreamState]):
+        """Stacked (G, T, d+1, C) snapshot lineages + (G, T) omegas for one
+        flush's readout groups, zero-padded to the flush's longest lineage.
 
-        Chunks whose classify stage already dispatched finish on the old
-        weights; everything dispatched after this call uses the new ones —
-        no chunk is dropped, duplicated, or delayed by the swap.  Returns
-        the number of in-flight chunks the swap left untouched."""
+        Memoized on the source arrays' identities: a steady flush mix
+        uploads the stack once; a hot-swap (new W / new ensemble object on
+        any stream) misses and rebuilds.  The cache holds strong references
+        to the sources so an id can never be recycled under the key."""
+        srcs = [(s.snaps if s.snaps is not None else s.W)
+                for s in group_streams]
+        key = tuple(id(s) for s in srcs)
+        hit = self._ens_cache.get(key)
+        if hit is not None:
+            return hit[1]
+        lineages = []
+        for s in group_streams:
+            if s.snaps is not None:
+                lineages.append((np.asarray(s.snaps, np.float32),
+                                 np.asarray(s.omega, np.float32)))
+            else:
+                W = np.asarray(s.W, np.float32)
+                lineages.append((W[None], np.ones(1, np.float32)))
+        t_max = max(sn.shape[0] for sn, _ in lineages)
+        d, c = lineages[0][0].shape[1:]
+        snaps = np.zeros((len(lineages), t_max, d, c), np.float32)
+        omegas = np.zeros((len(lineages), t_max), np.float32)
+        for gi, (sn, om) in enumerate(lineages):
+            snaps[gi, : sn.shape[0]] = sn
+            omegas[gi, : om.shape[0]] = om
+        out = (jnp.asarray(snaps), jnp.asarray(omegas))
+        self._ens_cache[key] = (srcs, out)
+        while len(self._ens_cache) > self._ens_cache_cap:
+            self._ens_cache.pop(next(iter(self._ens_cache)))
+        # upload-regression ledger for the fused path: recurring flush
+        # mixes should hit the memo — a climbing count means cache thrash
+        self.hot_path_stats["ensemble_uploads"] += 1
+        return out
+
+    # ------------------------------------------------------------------
+    def _swap_targets(self, stream: Optional[str]) -> List[StreamState]:
+        if stream is None:
+            return list(self.streams.values())
+        return [self.streams[stream]]
+
+    def hot_swap(self, W, *, version=None, t: Optional[float] = None,
+                 stream: Optional[str] = None) -> int:
+        """Swap a new fog-classifier readout into live streams' classify
+        stage, mid-run and without stalling.
+
+        ``stream`` names a single camera to swap (per-site promotion: a
+        drift episode in camera k must touch only camera k's readout);
+        ``None`` keeps the original swap-everywhere behaviour.  Chunks
+        whose classify stage already dispatched finish on the old weights;
+        everything dispatched after this call uses the new ones — no chunk
+        is dropped, duplicated, or delayed by the swap.  A readout swap
+        supersedes any Eq. 9 ensemble the target stream was serving.
+        Returns the number of in-flight chunks the swap left untouched."""
         W = np.asarray(W)
-        inflight = sum(1 for s in self.streams.values() if s.busy)
-        for s in self.streams.values():
+        targets = self._swap_targets(stream)
+        inflight = sum(1 for s in targets if s.busy)
+        for s in targets:
             s.W = W.copy()             # per-stream cache refresh
+            s.clear_ensemble()
         self.monitor.incr("hot_swaps")
         self.monitor.log_event("hot_swap", t=t if t is not None else 0.0,
-                               version=version, inflight=inflight)
+                               version=version, inflight=inflight,
+                               stream=stream)
+        return inflight
+
+    def hot_swap_ensemble(self, snaps, omega, *, version=None,
+                          t: Optional[float] = None,
+                          stream: Optional[str] = None) -> int:
+        """Swap an Eq. 9 snapshot ensemble into live serving.
+
+        The stream's classify stage switches to the multi-readout
+        ``fog.classify_ensemble`` / ``fog.classify_ensemble_batched``
+        variant scoring against the whole lineage; ``W`` (the latest
+        promoted readout) is untouched — the learning plane keeps using it
+        to rescore label candidates.  Same zero-loss semantics as
+        :meth:`hot_swap`."""
+        snaps = np.asarray(snaps)
+        omega = np.asarray(omega)
+        targets = self._swap_targets(stream)
+        inflight = sum(1 for s in targets if s.busy)
+        for s in targets:
+            s.set_ensemble(snaps, omega)
+        self.monitor.incr("hot_swaps")
+        self.monitor.log_event("hot_swap", t=t if t is not None else 0.0,
+                               version=version, inflight=inflight,
+                               stream=stream, kind="ensemble",
+                               snapshots=int(snaps.shape[0]))
         return inflight
 
     # ------------------------------------------------------------------
@@ -799,6 +1015,10 @@ class GraphScheduler:
             d["classify_flops_saved_frac"] = (
                 1.0 - hps["crops_classified"] / hps["crops_budget"])
         d["w_uploads"] = sum(s.w_uploads for s in self.streams.values())
+        d["e_uploads"] = sum(s.e_uploads for s in self.streams.values())
+        # per-field lazy-result ledger: which result fields were actually
+        # downloaded (a HITL-off run must never pay for fog_features)
+        d["field_downloads"] = dict(self.field_downloads)
         # simulated detect-stage makespan across the replica pool: with R
         # replicas the sub-batches overlap, so frames/span is the serving
         # plane's *capacity*, unlike frames/wall_s (one-CPU jit time)

@@ -61,15 +61,22 @@ def test_graph_registers_stages_and_models(models):
     assert graph.registry.entry("fog.encode_low").kind == "preprocess"
     assert graph.registry.list(kind="inference") == [
         "cloud.detect", "cloud.detect_split", "fog.classify_batched",
+        "fog.classify_ensemble", "fog.classify_ensemble_batched",
         "fog.classify_regions"]
     # the fused cloud stage and the compacted fog stage are both batchable
     assert graph.registry.entry("cloud.detect_split").metadata["fused"]
     assert graph.registry.entry("fog.classify_batched").metadata["batchable"]
+    # the Eq. 9 stages are flagged as multi-readout ensemble variants
+    assert graph.registry.entry("fog.classify_ensemble").metadata["ensemble"]
+    assert graph.registry.entry(
+        "fog.classify_ensemble_batched").metadata["batchable"]
     assert "cloud-detector" in graph.zoo and "fog-classifier" in graph.zoo
     assert "cloud.detect" in graph.dispatcher.deployed("cloud")
     assert "cloud.detect_split" in graph.dispatcher.deployed("cloud")
     assert "fog.classify_regions" in graph.dispatcher.deployed("fog")
     assert "fog.classify_batched" in graph.dispatcher.deployed("fog")
+    assert "fog.classify_ensemble" in graph.dispatcher.deployed("fog")
+    assert "fog.classify_ensemble_batched" in graph.dispatcher.deployed("fog")
 
 
 # ---------------------------------------------------------------------------
