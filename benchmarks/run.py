@@ -31,6 +31,8 @@ BENCHES = [
     ("per_site", "benchmarks.bench_per_site"),
     # also emits machine-readable artifacts/BENCH_e2e.json
     ("e2e_throughput", "benchmarks.bench_e2e_throughput"),
+    # also emits machine-readable artifacts/BENCH_steady.json
+    ("steady_state", "benchmarks.bench_steady_state"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline_table"),
 ]

@@ -1,14 +1,16 @@
-"""CI perf-regression gate: diff a fresh BENCH_e2e.json against the
+"""CI perf-regression gate: diff a fresh benchmark payload against the
 committed baseline.
 
-The e2e throughput benchmark emits machine-readable results
-(``BENCH_e2e.json``); the repository commits a baseline at
-``benchmarks/baselines/BENCH_e2e.json`` (the root/artifacts copies are
-scratch outputs, gitignored).  CI re-runs the benchmark and this script
-fails the build when a gated metric regresses beyond tolerance — a perf
-claim that is not continuously re-checked stops being true silently.
-Refresh the baseline by re-running the full benchmark and committing the
-new file alongside the change that moved the number.
+The e2e throughput and steady-state benchmarks emit machine-readable
+results (``BENCH_e2e.json``, ``BENCH_steady.json``); the repository
+commits baselines under ``benchmarks/baselines/`` (the root/artifacts
+copies are scratch outputs, gitignored).  CI re-runs the benchmarks and
+this script fails the build when a gated metric regresses beyond
+tolerance — a perf claim that is not continuously re-checked stops being
+true silently.  Refresh a baseline by re-running the full benchmark and
+committing the new file alongside the change that moved the number.
+The gate only compares metrics present in both payloads, so one invocation
+per payload pair covers both benchmark families.
 
 Gated metrics:
 
@@ -25,11 +27,22 @@ Gated metrics:
     is better; compared when workloads match.
   * ``bit_identical``               — hard gate: the fused path must never
     trade correctness for speed.
+  * ``p99_latency_s``               — steady-state tail chunk latency on
+    the simulated clock, lower is better; compared when workloads match
+    (tail latency moves with stream count and batch window).
+  * ``bundle_bytes_peak``           — peak device-buffer residency under
+    bounded flush-bundle retention, lower is better; workload-matched.
+  * ``residency_flat``              — hard gate: with a retention cap the
+    bundle_bytes series must plateau over the run; a growing series is
+    the lazy-bundle leak regardless of operating point.
 
 Usage:
   python scripts/check_bench_regression.py \
       --baseline benchmarks/baselines/BENCH_e2e.json \
       --fresh artifacts/BENCH_e2e.json
+  python scripts/check_bench_regression.py \
+      --baseline benchmarks/baselines/BENCH_steady.json \
+      --fresh artifacts/BENCH_steady.json
   python scripts/check_bench_regression.py --self-test   # gate the gate
 """
 from __future__ import annotations
@@ -92,9 +105,14 @@ def compare(baseline: Dict, fresh: Dict, tolerance: float
          workload_bound=False)
     gate("classify_flops_saved_frac", higher_better=True,
          workload_bound=True)
+    gate("p99_latency_s", higher_better=False, workload_bound=True)
+    gate("bundle_bytes_peak", higher_better=False, workload_bound=True)
     if "bit_identical" in fresh and not fresh["bit_identical"]:
         bad.append("REGRESSION bit_identical: fused path no longer matches "
                    "the sync baseline")
+    if "residency_flat" in fresh and not fresh["residency_flat"]:
+        bad.append("REGRESSION residency_flat: device-buffer residency grew "
+                   "over the steady-state run (flush-bundle retention leak)")
     return ok, bad
 
 
@@ -133,14 +151,32 @@ def self_test(tolerance: float) -> int:
          dict(base, speedup=1.1,
               workload={"streams": 4, "chunks_per_stream": 2}), False),
     ]
+    steady_base = {"p99_latency_s": 9.0, "bundle_bytes_peak": 7.0e6,
+                   "residency_flat": True,
+                   "workload": {"streams": 64, "rounds": 10}}
+    steady_cases = [
+        ("steady identical", dict(steady_base), False),
+        ("degraded p99 tail", dict(steady_base, p99_latency_s=12.0), True),
+        ("grown residency peak",
+         dict(steady_base, bundle_bytes_peak=1.5e7), True),
+        ("lost residency flatness",
+         dict(steady_base, residency_flat=False), True),
+        ("quick steady workload, slow p99 only",
+         dict(steady_base, p99_latency_s=12.0,
+              workload={"streams": 8, "rounds": 3}), False),
+        ("quick steady workload, growing residency",
+         dict(steady_base, residency_flat=False,
+              workload={"streams": 8, "rounds": 3}), True),
+    ]
     failures = 0
-    for name, fresh, want_fail in cases:
-        _, bad = compare(base, fresh, tolerance)
-        got_fail = bool(bad)
-        verdict = "ok" if got_fail == want_fail else "SELF-TEST FAILURE"
-        print(f"  {verdict}: {name} -> "
-              f"{'rejected' if got_fail else 'accepted'}")
-        failures += got_fail != want_fail
+    for ref, suite in ((base, cases), (steady_base, steady_cases)):
+        for name, fresh, want_fail in suite:
+            _, bad = compare(ref, fresh, tolerance)
+            got_fail = bool(bad)
+            verdict = "ok" if got_fail == want_fail else "SELF-TEST FAILURE"
+            print(f"  {verdict}: {name} -> "
+                  f"{'rejected' if got_fail else 'accepted'}")
+            failures += got_fail != want_fail
     if failures:
         print(f"# FAIL: self-test — {failures} case(s) misjudged")
         return 1

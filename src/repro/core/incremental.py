@@ -94,6 +94,26 @@ def ensemble_predict(snapshots: jax.Array, omega: jax.Array,
     return jnp.einsum("t,tnc->nc", omega, z)
 
 
+def prune_ensemble(snapshots, omega, *, eps: float = 1e-3):
+    """Drop near-zero-omega snapshots before serving.
+
+    The ridge solution of Eq. (9) routinely assigns some snapshots weights
+    orders of magnitude below the dominant one — they contribute nothing to
+    the combined score but inflate the serving-side stacked (G, T, d+1, C)
+    upload and the T-fold ensemble einsum linearly.  A snapshot is kept
+    when ``|omega_t| > eps * max_t |omega_t|`` (relative threshold: omega's
+    scale depends on the label count); the argmax snapshot is always kept,
+    so the pruned ensemble is never empty.  Returns host-side
+    ``(snapshots, omega, kept_idx)``."""
+    snapshots = np.asarray(snapshots)
+    omega = np.asarray(omega)
+    mag = np.abs(omega)
+    keep = mag > eps * mag.max()
+    keep[int(mag.argmax())] = True
+    idx = np.flatnonzero(keep)
+    return snapshots[idx], omega[idx], idx
+
+
 # ---------------------------------------------------------------------------
 # Evaluation helpers (shadow evaluator / promotion gate)
 # ---------------------------------------------------------------------------

@@ -38,10 +38,13 @@ end-to-end (``repro.serving.graph`` with ``hot_path="fused"``):
 ``HighLowProtocol.process_chunk`` drives the unfused stage functions
 strictly sequentially — the single-stream reference path.  The fused path
 is bit-identical to it: splitting a packed batch then slicing equals
-slicing then splitting (per-frame vmap), and the compacted classifier
-gathers crops from the same full crop grid before the backbone, whose
-per-row outputs are batch-composition-independent.  Orchestration (bytes,
-latency, cost accounting) happens at the stage boundaries.
+slicing then splitting (per-frame vmap), and the compacted classifier's
+crop stage shares one fixed-lowering bilinear program with the full-grid
+path (``impl="ref"`` materializes the grid then gathers; kernel impls run
+the Pallas ``crop_gather`` over just the bucket rows — same bits either
+way), feeding a backbone whose per-row outputs are batch-composition-
+independent.  Orchestration (bytes, latency, cost accounting) happens at
+the stage boundaries.
 """
 from __future__ import annotations
 
@@ -57,6 +60,7 @@ from repro.configs.vpaas_video import ClassifierConfig, DetectorConfig
 from repro.core import regions as reg
 from repro.core.bandwidth import (CLOUD, FOG, CostModel, DeviceProfile,
                                   LatencyBreakdown, NetworkModel)
+from repro.kernels import ops
 from repro.models import classifier as clf_mod
 from repro.models import detector as det_mod
 from repro.video import codec
@@ -186,6 +190,23 @@ def classify_regions(clf_cfg: ClassifierConfig, pcfg: ProtocolConfig,
     return _merge_fog(pcfg, split, fog_scores, fog_feats)
 
 
+def _crop_bucket(clf_cfg: ClassifierConfig, pcfg: ProtocolConfig,
+                 frames_hq: jax.Array, split: reg.RegionSplit,
+                 idxs: jax.Array) -> jax.Array:
+    """The compacted classify stages' crop step: (B, h, w, 3).
+
+    ``pcfg.impl`` is a static argname of the enclosing jits, so this is a
+    trace-time branch.  ``impl="ref"`` keeps the original shared-grid
+    materialize-then-gather (the oracle structure); any kernel impl crops
+    only the B bucket rows via the ``crop_gather`` Pallas kernel.  Both
+    produce bit-identical crops (see ``ref.bilinear_crops``)."""
+    if pcfg.impl in ("ref", "ref_unchunked"):
+        crops = reg.crop_batch(frames_hq, split.prop_boxes, clf_cfg.crop_hw)
+        return crops[idxs[0], idxs[1]]
+    return ops.crop_gather(frames_hq, split.prop_boxes, idxs,
+                           out_hw=clf_cfg.crop_hw, impl=pcfg.impl)
+
+
 @functools.partial(jax.jit, static_argnames=("clf_cfg", "pcfg"))
 def classify_compacted(clf_cfg: ClassifierConfig, pcfg: ProtocolConfig,
                        clf_params, Ws: jax.Array, frames_hq: jax.Array,
@@ -200,13 +221,14 @@ def classify_compacted(clf_cfg: ClassifierConfig, pcfg: ProtocolConfig,
     (G, d+1, C).  Only the gathered bucket rows pay the classifier-backbone
     FLOPs — the full-budget path pays F x N — and the scores/features are
     scattered back into zero-initialised grids, matching the masked
-    reference output bit-for-bit (the backbone is per-row deterministic,
-    and crops are gathered *after* the shared full crop grid, so the
-    bilinear resize keeps the reference path's exact lowering — only the
-    backbone, the dominant FLOPs term, runs compacted)."""
+    reference output bit-for-bit: the backbone is per-row deterministic,
+    and the crop stage shares one fixed-lowering bilinear program
+    (``ref.bilinear_crops``) across the shared-grid path and the
+    ``crop_gather`` kernel, so the kernel path (``impl != "ref"``) crops
+    ONLY the B bucket rows — cost scales with valid proposals, not F x N —
+    while staying bit-identical to gathering from the full grid."""
     fidx, ridx, widx = idxs[0], idxs[1], idxs[2]
-    crops = reg.crop_batch(frames_hq, split.prop_boxes, clf_cfg.crop_hw)
-    gathered = crops[fidx, ridx]                    # (B, h, w, 3)
+    gathered = _crop_bucket(clf_cfg, pcfg, frames_hq, split, idxs)
     out = clf_mod.classify_multi(clf_cfg, clf_params, gathered, Ws, widx)
     x, scores = out["features"], out["scores"]
     f, n = split.prop_valid.shape
@@ -257,8 +279,7 @@ def classify_compacted_ensemble(clf_cfg: ClassifierConfig,
     can mix streams with different snapshot counts — including plain
     single-readout streams (T=1, omega=[1.0])."""
     fidx, ridx, widx = idxs[0], idxs[1], idxs[2]
-    crops = reg.crop_batch(frames_hq, split.prop_boxes, clf_cfg.crop_hw)
-    gathered = crops[fidx, ridx]                    # (B, h, w, 3)
+    gathered = _crop_bucket(clf_cfg, pcfg, frames_hq, split, idxs)
     out = clf_mod.classify_ensemble_multi(clf_cfg, clf_params, gathered,
                                           snaps, omegas, widx)
     x, scores = out["features"], out["scores"]

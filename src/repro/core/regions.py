@@ -95,34 +95,29 @@ def compaction_indices(prop_valid: np.ndarray,
 # ---------------------------------------------------------------------------
 # HQ crop extraction (fog side)
 # ---------------------------------------------------------------------------
+# Both entry points delegate to ref.bilinear_crops — the single
+# fixed-lowering bilinear program shared with the Pallas crop_gather kernel
+# and its oracle — so the shared-grid path and the compacted kernel path
+# produce bit-identical crops under jit.
 def crop_and_resize(
     frame: jax.Array,           # (H, W, 3)
     boxes: jax.Array,           # (N, 4) xyxy in [0, 1]
     out_hw: Tuple[int, int],
 ) -> jax.Array:
     """Bilinear crop of each box to out_hw; returns (N, h, w, 3)."""
-    h_img, w_img = frame.shape[0], frame.shape[1]
-    oh, ow = out_hw
-
-    def one(box):
-        x1, y1, x2, y2 = box[0], box[1], box[2], box[3]
-        ys = y1 * (h_img - 1) + (y2 - y1) * (h_img - 1) * \
-            jnp.linspace(0.0, 1.0, oh)
-        xs = x1 * (w_img - 1) + (x2 - x1) * (w_img - 1) * \
-            jnp.linspace(0.0, 1.0, ow)
-        yy, xx = jnp.meshgrid(ys, xs, indexing="ij")
-        coords = jnp.stack([yy.ravel(), xx.ravel()])
-        out = jnp.stack([
-            jax.scipy.ndimage.map_coordinates(frame[..., c], coords, order=1)
-            for c in range(frame.shape[-1])], axis=-1)
-        return out.reshape(oh, ow, frame.shape[-1])
-
-    return jax.vmap(one)(boxes)
+    from repro.kernels import ref
+    n = boxes.shape[0]
+    return ref.bilinear_crops(frame[None], jnp.zeros(n, jnp.int32), boxes,
+                              out_hw)
 
 
 def crop_batch(frames: jax.Array, boxes: jax.Array,
                out_hw: Tuple[int, int]) -> jax.Array:
     """frames (F, H, W, 3), boxes (F, N, 4) -> (F, N, h, w, 3)."""
-    return jax.vmap(lambda f, b: crop_and_resize(f, b, out_hw))(frames, boxes)
+    from repro.kernels import ref
+    f, n = boxes.shape[0], boxes.shape[1]
+    fmap = jnp.repeat(jnp.arange(f, dtype=jnp.int32), n)
+    crops = ref.bilinear_crops(frames, fmap, boxes.reshape(f * n, 4), out_hw)
+    return crops.reshape(f, n, *out_hw, frames.shape[-1])
 
 

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for the compacted crop gather — the detect→split→
+classify chain's crop stage.
+
+Given the flush's HQ frames (F, H, W, 3), proposal boxes (F, N, 4) and the
+(3, B) compaction indices, emit the bucketed (B, oh, ow, 3) crop batch
+directly: only the B valid-proposal rows pay crop cost, where the old
+shared-grid path materialized all F x N crops before gathering.
+
+The grid runs one program per bucket row.  The row's (frame, region)
+indices live in the scalar-prefetch operand, so the BlockSpec index maps
+stream exactly ONE frame and ONE box into VMEM per row — pad rows (frame
+index F, out of bounds) clip to the last frame, matching the oracle's
+gather-clips / scatter-drops semantics.  The kernel body is
+:func:`repro.kernels.ref.bilinear_crops` on that single row, which is the
+same fixed-lowering bilinear program the shared-grid path runs — so the
+kernel output is bit-identical to gathering from the full crop grid (the
+property `classify_compacted` relies on; verified in interpret mode on CPU
+CI).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref
+
+
+def _crop_kernel(idx_ref, frame_ref, box_ref, liny_ref, linx_ref, out_ref,
+                 *, oh: int, ow: int):
+    del idx_ref                      # consumed by the BlockSpec index maps
+    out_ref[...] = ref.bilinear_crops(
+        frame_ref[...], jnp.zeros((1,), jnp.int32), box_ref[0], (oh, ow),
+        lin_y=liny_ref[...], lin_x=linx_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("out_hw", "interpret"))
+def crop_gather(frames: jax.Array,       # (F, H, W, C)
+                boxes: jax.Array,        # (F, N, 4)
+                idxs: jax.Array,         # (>=2, B) int32
+                *, out_hw: Tuple[int, int],
+                interpret: bool = False) -> jax.Array:
+    """(B, oh, ow, C) bucketed crop batch; see module docstring."""
+    f, h, w, ch = frames.shape
+    n = boxes.shape[1]
+    b = idxs.shape[1]
+    oh, ow = out_hw
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, h, w, ch),
+                lambda i, idx_ref: (jnp.clip(idx_ref[0, i], 0, f - 1),
+                                    0, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, 4),
+                lambda i, idx_ref: (jnp.clip(idx_ref[0, i], 0, f - 1),
+                                    jnp.clip(idx_ref[1, i], 0, n - 1), 0)),
+            pl.BlockSpec((oh,), lambda i, idx_ref: (0,)),
+            pl.BlockSpec((ow,), lambda i, idx_ref: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, ch),
+                               lambda i, idx_ref: (i, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_crop_kernel, oh=oh, ow=ow),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, oh, ow, ch), frames.dtype),
+        interpret=interpret,
+    )(idxs.astype(jnp.int32), frames, boxes,
+      jnp.asarray(ref._crop_lin(oh)), jnp.asarray(ref._crop_lin(ow)))

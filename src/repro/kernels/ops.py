@@ -109,3 +109,34 @@ def region_filter_mask(proposals, prop_valid, accepted, acc_valid, loc_scores,
         proposals, prop_valid, accepted, acc_valid, loc_scores,
         theta_loc=theta_loc, theta_iou=theta_iou, theta_back=theta_back,
         frame_area=frame_area, interpret=(impl == "interpret"))
+
+
+def crop_gather(frames, boxes, idxs, *, out_hw, impl: str = "ref"):
+    """Compacted crop gather: (F,H,W,C) x (F,N,4) x (3,B) -> (B,oh,ow,C).
+
+    All impls share the fixed-lowering bilinear program in
+    ``ref.bilinear_crops``, so ref / interpret / pallas outputs are
+    bit-identical to gathering from the full shared crop grid.
+    """
+    if impl in ("ref", "ref_unchunked"):
+        return ref.crop_gather(frames, boxes, idxs, out_hw=out_hw)
+    from repro.kernels import crop_gather as cg
+    return cg.crop_gather(frames, boxes, idxs, out_hw=out_hw,
+                          interpret=(impl == "interpret"))
+
+
+def onevsall_scores(x, w, *, impl: str = "ref"):
+    if impl in ("ref", "ref_unchunked"):
+        from repro.kernels import onevsall as ov
+        return ov.onevsall_scores_ref(x, w)
+    from repro.kernels import onevsall as ov
+    return ov.onevsall_scores(x, w, interpret=(impl == "interpret"))
+
+
+def onevsall_update(x, y, w, *, eta: float = 0.3, impl: str = "ref"):
+    if impl in ("ref", "ref_unchunked"):
+        from repro.kernels import onevsall as ov
+        return ov.onevsall_update_ref(x, y, w, eta=eta)
+    from repro.kernels import onevsall as ov
+    return ov.onevsall_update(x, y, w, eta=eta,
+                              interpret=(impl == "interpret"))

@@ -7,10 +7,12 @@ real TPUs; ``interpret=True`` validates the kernel bodies on CPU).
 """
 from __future__ import annotations
 
-from typing import Optional
+import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -1e30
 
@@ -331,6 +333,121 @@ def region_filter_mask(
     h = jnp.maximum(proposals[:, 3] - proposals[:, 1], 0.0)
     keep &= (w * h / frame_area) <= theta_back
     return keep
+
+
+# ---------------------------------------------------------------------------
+# Bilinear crop gather (the compacted classify path's crop stage)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _crop_lin(n: int) -> np.ndarray:
+    """The [0, 1] sample grid as a host-computed float32 literal.
+
+    ``jnp.linspace`` is NOT used on purpose: under jit its internal
+    arithmetic is constant-folded by XLA with different rounding than the
+    eager op-by-op path, so two programs embedding the "same" linspace can
+    disagree by an ulp — enough to flip a floor() and break the bitwise
+    contract between the crop kernel and the shared-grid path.  A numpy
+    literal is one fixed bit pattern everywhere.  The cache holds numpy
+    (never jnp: a device array created under a jit trace would leak its
+    tracer into later calls)."""
+    return np.linspace(0.0, 1.0, n, dtype=np.float32)
+
+
+def bilinear_crops(frames: jax.Array,    # (F, H, W, C)
+                   fmap: jax.Array,      # (K,) int32 in-range frame index
+                   boxes: jax.Array,     # (K, 4) xyxy in [0, 1]
+                   out_hw: Tuple[int, int],
+                   *,
+                   lin_y: Optional[jax.Array] = None,   # (oh,) sample grid
+                   lin_x: Optional[jax.Array] = None) -> jax.Array:
+    """Bilinear-resample K boxes to ``out_hw``; returns (K, oh, ow, C).
+
+    This is THE crop program: the shared-grid path (``crop_batch``), the
+    compacted gather oracle (``crop_gather``) and the Pallas kernel body all
+    call it, so every path computes bit-identical pixels.  Two properties
+    make that hold across different surrounding program structures on CPU:
+
+      * the sample grid is a baked float32 literal (see ``_crop_lin``), and
+      * ``lax.optimization_barrier`` separates every multiply from the add
+        it feeds — XLA's fusion emitters may otherwise contract ``a*b + c``
+        into an FMA, and whether they do depends on how the op got batched
+        (the exact "flat per-pair cropping lowers differently under XLA
+        fusion" constraint that forced the old full-grid materialization).
+
+    ``lin_y``/``lin_x`` default to ``_crop_lin``; the Pallas kernel body
+    passes them as explicit kernel operands instead (a kernel can't capture
+    array constants) — same bits either way.
+
+    Math is bit-identical to ``jax.scipy.ndimage.map_coordinates(order=1,
+    mode='constant')`` evaluated eagerly."""
+    f, h_img, w_img, ch = frames.shape
+    k = boxes.shape[0]
+    oh, ow = out_hw
+    if lin_y is None:
+        lin_y = jnp.asarray(_crop_lin(oh))
+    if lin_x is None:
+        lin_x = jnp.asarray(_crop_lin(ow))
+    x1, y1, x2, y2 = (boxes[:, 0], boxes[:, 1], boxes[:, 2], boxes[:, 3])
+    ya = (y1 * (h_img - 1))[:, None]                        # (K, 1)
+    yb = ((y2 - y1) * (h_img - 1))[:, None] * lin_y          # (K, oh)
+    xa = (x1 * (w_img - 1))[:, None]
+    xb = ((x2 - x1) * (w_img - 1))[:, None] * lin_x
+    ya, yb, xa, xb = jax.lax.optimization_barrier((ya, yb, xa, xb))
+    ys = ya + yb                                            # (K, oh)
+    xs = xa + xb                                            # (K, ow)
+    yy = jnp.broadcast_to(ys[:, :, None], (k, oh, ow)).reshape(k, oh * ow)
+    xx = jnp.broadcast_to(xs[:, None, :], (k, oh, ow)).reshape(k, oh * ow)
+    y_lo_f = jnp.floor(yy)
+    x_lo_f = jnp.floor(xx)
+    wy_hi = yy - y_lo_f
+    wy_lo = 1 - wy_hi
+    wx_hi = xx - x_lo_f
+    wx_lo = 1 - wx_hi
+    y_lo = y_lo_f.astype(jnp.int32)
+    x_lo = x_lo_f.astype(jnp.int32)
+    y_hi = y_lo + 1
+    x_hi = x_lo + 1
+    fk = fmap[:, None]
+
+    def term(yi, wy, xi, wx):
+        # mode='constant': out-of-frame taps contribute cval=0 (boxes are
+        # clipped to [0,1], so only the +1 taps on the far edge hit this)
+        valid = (yi >= 0) & (yi < h_img) & (xi >= 0) & (xi < w_img)
+        yc = jnp.clip(yi, 0, h_img - 1)
+        xc = jnp.clip(xi, 0, w_img - 1)
+        contrib = jnp.where(valid[..., None], frames[fk, yc, xc], 0.0)
+        return (wy * wx)[..., None] * contrib
+
+    t00 = term(y_lo, wy_lo, x_lo, wx_lo)
+    t01 = term(y_lo, wy_lo, x_hi, wx_hi)
+    t10 = term(y_hi, wy_hi, x_lo, wx_lo)
+    t11 = term(y_hi, wy_hi, x_hi, wx_hi)
+    t00, t01, t10, t11 = jax.lax.optimization_barrier((t00, t01, t10, t11))
+    out = ((t00 + t01) + t10) + t11
+    return out.reshape(k, oh, ow, ch)
+
+
+@functools.partial(jax.jit, static_argnames=("out_hw",))
+def crop_gather(frames: jax.Array,       # (F, H, W, C) HQ frames
+                boxes: jax.Array,        # (F, N, 4) proposal boxes
+                idxs: jax.Array,         # (>=2, B) compaction indices
+                *, out_hw: Tuple[int, int]) -> jax.Array:
+    """Oracle for the compacted crop gather: (B, oh, ow, C).
+
+    ``idxs[0]/idxs[1]`` are the flush's (frame, region) gather rows; pad
+    rows carry the out-of-bounds frame index F and clip to the last frame
+    (harmless garbage crop — the classify path's scatter drops them), the
+    same semantics as gathering from the full crop grid with jnp's clamping
+    indexing.
+
+    Jitted here (not at the call site) because the bitwise contract with
+    the shared-grid path holds for the *jitted* lowering of this program —
+    an eager evaluation rounds each op independently and can drift by an
+    ulp."""
+    f, n = boxes.shape[0], boxes.shape[1]
+    fidx = jnp.clip(idxs[0], 0, f - 1)
+    ridx = jnp.clip(idxs[1], 0, n - 1)
+    return bilinear_crops(frames, fidx, boxes[fidx, ridx], out_hw)
 
 
 def flash_attention_windowed_unrolled(q, k, v, *, window, softcap=None,

@@ -62,6 +62,7 @@ from typing import Any, Dict, Optional, Set
 
 import numpy as np
 
+from repro.core import incremental
 from repro.core.hitl import UNLABELED, OracleAnnotator
 from repro.learning.drift import DriftConfig, DriftDetector, HealthPosterior
 from repro.learning.labeling import LabelCandidate, LabelingQueue
@@ -543,6 +544,12 @@ class ContinualLearningPlane:
         ens_acc = live_acc = None
         if omega is not None:
             snaps, omega = site.trainer.ensemble()
+            # drop near-zero-omega snapshots BEFORE gating, so the gate
+            # scores exactly the (smaller) ensemble that would serve — a
+            # pruned stack shrinks the scheduler's (G, T, d+1, C) upload
+            # and the T-fold serving einsum
+            n_fit = int(snaps.shape[0])
+            snaps, omega, _ = incremental.prune_ensemble(snaps, omega)
             decision = site.gate.evaluate_ensemble(self._live_W(site),
                                                    snaps, omega, t,
                                                    extra=extra)
@@ -557,7 +564,8 @@ class ContinualLearningPlane:
                 self.monitor.log_event(
                     "ensemble_promotion", t=t, site=site.name or None,
                     snapshots=int(snaps.shape[0]), score=ens_acc,
-                    live_score=live_acc, inflight=inflight)
+                    live_score=live_acc, inflight=inflight,
+                    pruned=n_fit - int(snaps.shape[0]))
         if reason == "budget":
             self.monitor.log_event("budget_exhausted", t=t,
                                    site=site.name or None,

@@ -291,8 +291,27 @@ class _FlushBundle:
         self._field_downloads = field_downloads
         self._cache: Dict[int, np.ndarray] = {}
         self._touched = False
+        # retention bookkeeping (GraphScheduler.max_retained_bundles):
+        # chunks of this flush not yet finalized, and the id-deduped bytes
+        # of the device buffers this bundle keeps alive while unsealed
+        self.pending = 0
+        self.sealed = False
+        seen: Dict[int, int] = {}
+        for v in (list(merged.values())
+                  + [getattr(split, f) for f in split._fields]):
+            if not isinstance(v, np.ndarray):
+                seen[id(v)] = v.nbytes
+        self.device_bytes = sum(seen.values())
 
     def field(self, name: str) -> np.ndarray:
+        if self.sealed:
+            arr = self._host.get(name)
+            if arr is None:
+                raise RuntimeError(
+                    f"field {name!r} first accessed after its flush bundle "
+                    "was sealed (max_retained_bundles exceeded); consume "
+                    "results at finalize or raise the retention cap")
+            return arr
         src = (self.merged[name] if name in self.merged
                else getattr(self.split, name))
         if isinstance(src, np.ndarray):
@@ -312,6 +331,32 @@ class _FlushBundle:
             # device-side because the RegionSplit tuple aliases them
             self.merged[name] = arr
         return arr
+
+    def seal(self) -> None:
+        """Drop every device reference this bundle holds.
+
+        Fields already downloaded stay available (the host copies move to
+        ``_host``); a *first* access after sealing raises — by then the
+        scheduler has decided this flush's device memory must free.  Called
+        only on fully-finalized bundles past the retention cap."""
+        if self.sealed:
+            return
+        host: Dict[str, np.ndarray] = {}
+        for name, v in self.merged.items():
+            if isinstance(v, np.ndarray):
+                host[name] = v
+        for name in self.split._fields:
+            src = getattr(self.split, name)
+            if isinstance(src, np.ndarray):
+                host[name] = src
+            else:
+                arr = self._cache.get(id(src))
+                if arr is not None:
+                    host[name] = arr
+        self._host = host
+        self.split = self.merged = None
+        self._cache.clear()
+        self.sealed = True
 
 
 class LazyChunkResult:
@@ -369,6 +414,7 @@ class GraphScheduler:
                  cold_start_s: float = 0.0,
                  hot_path: str = "fused",
                  crop_buckets: Tuple[int, ...] = (4, 8, 16, 32, 64, 128),
+                 max_retained_bundles: Optional[int] = 256,
                  fault=None, fallback_fn: Optional[Callable] = None):
         assert hot_path in ("fused", "sync")
         proto = graph.protocol
@@ -457,7 +503,17 @@ class GraphScheduler:
         self.hot_path_stats = {"flushes": 0, "host_syncs": 0,
                                "result_downloads": 0, "crops_classified": 0,
                                "crops_budget": 0, "inflight_peak": 0,
-                               "ensemble_flushes": 0, "ensemble_uploads": 0}
+                               "ensemble_flushes": 0, "ensemble_uploads": 0,
+                               "bundles_sealed": 0, "bundles_retained_peak": 0,
+                               "bundle_bytes": 0, "bundle_bytes_peak": 0}
+        # bounded flush-bundle retention: a long-running service finalizes
+        # far more flushes than any consumer revisits, and each unsealed
+        # bundle pins its flush's device buffers.  Once more than
+        # ``max_retained_bundles`` bundles are alive, the oldest fully-
+        # finalized ones are sealed (device refs dropped; downloaded host
+        # copies kept) so device residency stays flat.  ``None`` disables.
+        self.max_retained_bundles = max_retained_bundles
+        self._bundles: Deque[_FlushBundle] = deque()
         # per-field result download counts (fused path): the lazy-bundle
         # regression ledger — a HITL-off run must show zero fog_features /
         # fog_scores downloads here
@@ -822,6 +878,17 @@ class GraphScheduler:
         # slices numpy views — fields nothing reads are never downloaded
         bundle = _FlushBundle(split_real, merged, self.hot_path_stats,
                               self.field_downloads)
+        bundle.pending = len(reqs)
+        self._bundles.append(bundle)
+        hps = self.hot_path_stats
+        hps["bundle_bytes"] += bundle.device_bytes
+        hps["bundle_bytes_peak"] = max(hps["bundle_bytes_peak"],
+                                       hps["bundle_bytes"])
+        hps["bundles_retained_peak"] = max(hps["bundles_retained_peak"],
+                                           len(self._bundles))
+        # residency time series (sim clock): the steady-state bench asserts
+        # this stays flat under bounded retention
+        self.monitor.record("bundle_bytes", float(hps["bundle_bytes"]), t)
         for req, sl in zip(reqs, slices):
             n_crops = int(counts[sl].sum())
             coord_bytes = 9.0 * n_crops
@@ -898,7 +965,24 @@ class GraphScheduler:
             # the continual-learning plane runs beside serving: labeling and
             # training cost background time, never this chunk's latency
             self.plane.on_chunk(self, stream, chunk, res, t, data["mode"])
+        if data.get("inflight"):
+            # last: every consumer that runs *at* finalize (HITL collect,
+            # the learning plane) has touched its fields by now
+            res._bundle.pending -= 1
+            self._maybe_seal()
         self._pull_next(stream)
+
+    def _maybe_seal(self) -> None:
+        """Seal oldest fully-finalized bundles past the retention cap."""
+        cap = self.max_retained_bundles
+        if cap is None:
+            return
+        hps = self.hot_path_stats
+        while len(self._bundles) > cap and self._bundles[0].pending == 0:
+            b = self._bundles.popleft()
+            hps["bundle_bytes"] -= b.device_bytes
+            b.seal()
+            hps["bundles_sealed"] += 1
 
     # ------------------------------------------------------------------
     def _ensemble_stack(self, group_streams: List[StreamState]):

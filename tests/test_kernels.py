@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels import iou_filter as ik
@@ -206,3 +206,27 @@ def test_nms_removes_duplicates():
     scores = jnp.asarray([0.9, 0.8, 0.7])
     keep = ref.nms_mask(boxes, scores, jnp.ones(3, bool), 0.5)
     assert keep.tolist() == [True, False, True]
+
+
+# ---------------------------------------------------------------------------
+# one-vs-all kernels via the ops dispatch layer
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,d,c", [(64, 17, 10), (130, 33, 21), (8, 8, 4)])
+def test_onevsall_scores_dispatch(b, d, c):
+    kx, kw = jax.random.split(KEY)
+    x = jax.random.normal(kx, (b, d))
+    w = jax.random.normal(kw, (d, c))
+    want = ops.onevsall_scores(x, w, impl="ref")
+    got = ops.onevsall_scores(x, w, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("b,d,c", [(64, 17, 10), (96, 16, 8)])
+def test_onevsall_update_dispatch(b, d, c):
+    kx, kw, ky = jax.random.split(KEY, 3)
+    x = jax.random.normal(kx, (b, d))
+    w = jax.random.normal(kw, (d, c))
+    y = jax.nn.one_hot(jax.random.randint(ky, (b,), 0, c), c)
+    want = ops.onevsall_update(x, y, w, eta=0.3, impl="ref")
+    got = ops.onevsall_update(x, y, w, eta=0.3, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
