@@ -33,6 +33,8 @@ BENCHES = [
     ("e2e_throughput", "benchmarks.bench_e2e_throughput"),
     # also emits machine-readable artifacts/BENCH_steady.json
     ("steady_state", "benchmarks.bench_steady_state"),
+    # also emits machine-readable artifacts/BENCH_shard.json
+    ("shard_scale", "benchmarks.bench_shard_scale"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline_table"),
 ]

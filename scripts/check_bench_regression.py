@@ -35,6 +35,14 @@ Gated metrics:
   * ``residency_flat``              — hard gate: with a retention cap the
     bundle_bytes series must plateau over the run; a growing series is
     the lazy-bundle leak regardless of operating point.
+  * ``overhead_ratio``              — shard-scale sweep: per-chunk
+    scheduling overhead at the top of the stream sweep over the bottom,
+    lower is better; workload-matched (the sweep shape defines it).
+  * ``overhead_flat``               — hard gate: the sharded scheduler's
+    per-stream overhead must stay within the sweep's flat_factor bound;
+    a growing ratio is the O(Q) scan creeping back regardless of machine.
+  * ``store_bytes_peak``            — claim-check artifact-store peak
+    physical bytes, lower is better; workload-matched.
 
 Usage:
   python scripts/check_bench_regression.py \
@@ -43,6 +51,9 @@ Usage:
   python scripts/check_bench_regression.py \
       --baseline benchmarks/baselines/BENCH_steady.json \
       --fresh artifacts/BENCH_steady.json
+  python scripts/check_bench_regression.py \
+      --baseline benchmarks/baselines/BENCH_shard.json \
+      --fresh artifacts/BENCH_shard.json
   python scripts/check_bench_regression.py --self-test   # gate the gate
 """
 from __future__ import annotations
@@ -107,12 +118,18 @@ def compare(baseline: Dict, fresh: Dict, tolerance: float
          workload_bound=True)
     gate("p99_latency_s", higher_better=False, workload_bound=True)
     gate("bundle_bytes_peak", higher_better=False, workload_bound=True)
+    gate("overhead_ratio", higher_better=False, workload_bound=True)
+    gate("store_bytes_peak", higher_better=False, workload_bound=True)
     if "bit_identical" in fresh and not fresh["bit_identical"]:
         bad.append("REGRESSION bit_identical: fused path no longer matches "
                    "the sync baseline")
     if "residency_flat" in fresh and not fresh["residency_flat"]:
         bad.append("REGRESSION residency_flat: device-buffer residency grew "
                    "over the steady-state run (flush-bundle retention leak)")
+    if "overhead_flat" in fresh and not fresh["overhead_flat"]:
+        bad.append("REGRESSION overhead_flat: per-stream scheduling "
+                   "overhead grew with the stream count (sharded scheduler "
+                   "no longer bounds the per-flush scan)")
     return ok, bad
 
 
@@ -168,8 +185,26 @@ def self_test(tolerance: float) -> int:
          dict(steady_base, residency_flat=False,
               workload={"streams": 8, "rounds": 3}), True),
     ]
+    shard_base = {"overhead_ratio": 1.05, "overhead_flat": True,
+                  "p99_latency_s": 4.0, "store_bytes_peak": 2.0e7,
+                  "workload": {"streams": [64, 256, 1024], "rounds": 4}}
+    shard_cases = [
+        ("shard identical", dict(shard_base), False),
+        ("lost overhead flatness",
+         dict(shard_base, overhead_ratio=1.8, overhead_flat=False), True),
+        ("crept overhead ratio (still under flat bound)",
+         dict(shard_base, overhead_ratio=1.29), True),
+        ("grown store peak", dict(shard_base, store_bytes_peak=4.0e7), True),
+        ("quick shard workload, grown store only",
+         dict(shard_base, store_bytes_peak=4.0e7,
+              workload={"streams": [16, 64], "rounds": 2}), False),
+        ("quick shard workload, lost flatness",
+         dict(shard_base, overhead_flat=False,
+              workload={"streams": [16, 64], "rounds": 2}), True),
+    ]
     failures = 0
-    for ref, suite in ((base, cases), (steady_base, steady_cases)):
+    for ref, suite in ((base, cases), (steady_base, steady_cases),
+                       (shard_base, shard_cases)):
         for name, fresh, want_fail in suite:
             _, bad = compare(ref, fresh, tolerance)
             got_fail = bool(bad)

@@ -199,7 +199,8 @@ class MultiStreamCoordinator:
                  scale_unit: Optional[str] = None,
                  hot_path: str = "fused",
                  autoscaler=None, fault: FaultTolerantCoordinator = None,
-                 learning_plane=None):
+                 learning_plane=None, num_shards: int = 1,
+                 use_store: bool = False):
         self.protocol = protocol
         self.clf_params = clf_params
         self.fallback_params = fallback_params
@@ -211,16 +212,29 @@ class MultiStreamCoordinator:
             # with a replica pool the autoscaler manages replicas; a single
             # executor keeps the legacy in-place device scaling
             scale_unit = "replicas" if cloud_replicas > 1 else "devices"
-        self.scheduler = GraphScheduler(
-            self.graph, network=self.network, monitor=self.monitor,
-            batcher=CrossStreamBatcher(max_chunks=max_batch_chunks,
-                                       window=batch_window),
+        sched_kw = dict(
+            network=self.network, monitor=self.monitor,
             cloud_devices=cloud_devices, cloud_replicas=cloud_replicas,
             autoscaler=autoscaler, scale_unit=scale_unit,
             deadline_batching=deadline_batching,
             adaptive_margin=adaptive_margin, cold_start_s=cold_start_s,
             hot_path=hot_path,
             fault=fault, fallback_fn=self._fog_fallback)
+        if num_shards > 1 or use_store:
+            # thousand-stream mode: K per-shard event loops + claim-check
+            # ingestion over one shared replica pool (repro.serving.shards)
+            from repro.serving.shards import ShardedScheduler
+            self.scheduler = ShardedScheduler(
+                self.graph, num_shards=num_shards, use_store=use_store,
+                batcher_factory=lambda i: CrossStreamBatcher(
+                    max_chunks=max_batch_chunks, window=batch_window),
+                **sched_kw)
+        else:
+            self.scheduler = GraphScheduler(
+                self.graph,
+                batcher=CrossStreamBatcher(max_chunks=max_batch_chunks,
+                                           window=batch_window),
+                **sched_kw)
         self.plane = learning_plane
         if learning_plane is not None:
             # the continual-learning plane replaces per-stream inline HITL

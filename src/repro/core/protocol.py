@@ -150,6 +150,42 @@ def detect_split(det_cfg: DetectorConfig, pcfg: ProtocolConfig, det_params,
         theta_iou=pcfg.theta_iou, theta_back=pcfg.theta_back, impl=pcfg.impl)
 
 
+@functools.partial(jax.jit, static_argnames=("det_cfg", "pcfg"),
+                   donate_argnums=(3,))
+def detect_split_donated(det_cfg: DetectorConfig, pcfg: ProtocolConfig,
+                         det_params, frames: jax.Array) -> reg.RegionSplit:
+    """:func:`detect_split` with the packed frame batch donated to XLA.
+
+    The scheduler routes here only when the batch is the dispatch-owned
+    multi-request concat (dead after this call) on a non-CPU backend, so
+    XLA may reuse the buffer in place.  On CPU donation is a warning-level
+    no-op and the scheduler keeps the plain stage; either way the math —
+    and therefore the output — is identical to :func:`detect_split`."""
+    det = det_mod.detect(det_cfg, det_params, frames)
+    return reg.split_regions(
+        det, theta_cls=pcfg.theta_cls, theta_loc=pcfg.theta_loc,
+        theta_iou=pcfg.theta_iou, theta_back=pcfg.theta_back, impl=pcfg.impl)
+
+
+@functools.partial(jax.jit, static_argnames=("det_cfg", "pcfg"))
+def detect_split_dynamic(det_cfg: DetectorConfig, pcfg: ProtocolConfig,
+                         det_params, frames: jax.Array,
+                         theta_cls: jax.Array, theta_loc: jax.Array
+                         ) -> reg.RegionSplit:
+    """Fused detect + split with per-frame (per-site) traced thresholds.
+
+    Used when a flush packs streams whose ``theta_cls`` / ``theta_loc``
+    were adapted away from the global config: the (F,) theta vectors ride
+    in as traced args, so the handful of per-site values never force a
+    recompile.  With every frame at the config defaults the output is
+    bitwise-equal to :func:`detect_split` (thetas only enter elementwise
+    comparisons — see :func:`repro.core.regions.split_regions_dynamic`)."""
+    det = det_mod.detect(det_cfg, det_params, frames)
+    return reg.split_regions_dynamic(
+        det, theta_cls=theta_cls, theta_loc=theta_loc,
+        theta_iou=pcfg.theta_iou, theta_back=pcfg.theta_back)
+
+
 def _merge_fog(pcfg: ProtocolConfig, split: reg.RegionSplit,
                fog_scores: jax.Array, fog_feats: jax.Array
                ) -> Dict[str, jax.Array]:
@@ -183,7 +219,10 @@ def classify_regions(clf_cfg: ClassifierConfig, pcfg: ProtocolConfig,
     crops = reg.crop_batch(frames_hq, split.prop_boxes, clf_cfg.crop_hw)
     f, n = crops.shape[0], crops.shape[1]
     flat = crops.reshape(f * n, *crops.shape[2:])
-    out = clf_mod.classify(clf_cfg, clf_params, flat, W=W)
+    # the one-vs-all head follows the same kernel knob as the filter: on
+    # kernel impls the fused Pallas head scores the crops (bit-validated
+    # against the inline sigmoid matmul)
+    out = clf_mod.classify(clf_cfg, clf_params, flat, W=W, impl=pcfg.impl)
     mask = split.prop_valid[..., None]
     fog_scores = jnp.where(mask, out["scores"].reshape(f, n, -1), 0.0)
     fog_feats = jnp.where(mask, out["features"].reshape(f, n, -1), 0.0)

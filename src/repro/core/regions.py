@@ -44,15 +44,73 @@ def split_regions(
                                      impl=impl))(boxes, loc * cls_conf,
                                                  acc_raw)
 
-    def per_frame(bx, lc, av):
-        keep = ops.region_filter_mask(
-            bx, lc >= theta_loc, bx, av, lc,
-            theta_loc=theta_loc, theta_iou=theta_iou, theta_back=theta_back,
-            impl=impl)
-        keep = keep & ~av          # accepted regions don't go to the fog
-        return ops.nms_mask(bx, lc, keep, iou_threshold=nms_iou, impl=impl)
+    if impl in ("ref", "ref_unchunked"):
+        def per_frame(bx, lc, av):
+            keep = ops.region_filter_mask(
+                bx, lc >= theta_loc, bx, av, lc,
+                theta_loc=theta_loc, theta_iou=theta_iou,
+                theta_back=theta_back, impl=impl)
+            keep = keep & ~av      # accepted regions don't go to the fog
+            return ops.nms_mask(bx, lc, keep, iou_threshold=nms_iou,
+                                impl=impl)
 
-    prop_valid = jax.vmap(per_frame)(boxes, loc, acc_valid)
+        prop_valid = jax.vmap(per_frame)(boxes, loc, acc_valid)
+    else:
+        # kernel impls: ONE whole-batch fused filter pass over the flush's
+        # (F, N) grid instead of F vmapped per-frame kernel launches —
+        # the filter is fused into the detect_split dispatch itself
+        keep = ops.region_filter_mask_batch(
+            boxes, loc >= theta_loc, boxes, acc_valid, loc,
+            theta_loc=theta_loc, theta_iou=theta_iou,
+            theta_back=theta_back, impl=impl)
+        keep = keep & ~acc_valid   # accepted regions don't go to the fog
+        prop_valid = jax.vmap(
+            lambda bx, lc, kp: ops.nms_mask(bx, lc, kp,
+                                            iou_threshold=nms_iou,
+                                            impl=impl))(boxes, loc, keep)
+    return RegionSplit(boxes, labels, acc_valid, boxes, prop_valid)
+
+
+def split_regions_dynamic(
+    det: Dict[str, jax.Array],
+    *,
+    theta_cls: jax.Array,       # (F,) per-frame (per-site) thresholds
+    theta_loc: jax.Array,       # (F,)
+    theta_iou: float,
+    theta_back: float,
+) -> RegionSplit:
+    """§IV.B split with *traced* per-frame acceptance thresholds.
+
+    Per-site threshold adaptation packs streams with different
+    ``theta_cls`` / ``theta_loc`` into one fused flush, so the thresholds
+    arrive as (F,) arrays instead of static config floats.  The reference
+    filter uses thetas only in elementwise comparisons, so tracing them is
+    exact: with every frame at the global defaults this returns the same
+    bits as :func:`split_regions` (impl="ref").  The Pallas filter bakes
+    thetas in as static kernel params, so this variant always runs the
+    reference math."""
+    from repro.kernels import ref
+
+    boxes, loc, probs = det["boxes"], det["loc_scores"], det["cls_probs"]
+    cls_conf = jnp.max(probs, axis=-1)
+    labels = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    tc = jnp.asarray(theta_cls)
+    tl = jnp.asarray(theta_loc)
+
+    nms_iou = 0.45
+    acc_raw = (loc >= tl[:, None]) & (cls_conf >= tc[:, None])
+    acc_valid = jax.vmap(
+        lambda b, s, v: ops.nms_mask(b, s, v, iou_threshold=nms_iou))(
+            boxes, loc * cls_conf, acc_raw)
+
+    def per_frame(bx, lc, av, tl_f):
+        keep = ref.region_filter_mask(
+            bx, lc >= tl_f, bx, av, lc,
+            theta_loc=tl_f, theta_iou=theta_iou, theta_back=theta_back)
+        keep = keep & ~av          # accepted regions don't go to the fog
+        return ops.nms_mask(bx, lc, keep, iou_threshold=nms_iou)
+
+    prop_valid = jax.vmap(per_frame)(boxes, loc, acc_valid, tl)
     return RegionSplit(boxes, labels, acc_valid, boxes, prop_valid)
 
 

@@ -132,3 +132,86 @@ def region_filter_mask(proposals, prop_valid, accepted, acc_valid, loc_scores,
     )(proposals, prop_valid.astype(jnp.int32), accepted,
       acc_valid.astype(jnp.int32), loc_scores)
     return keep[:n].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# Frame-batched fused filter (the detect_split dispatch path)
+# ---------------------------------------------------------------------------
+def _filter_kernel_batch(prop_ref, pv_ref, acc_ref, av_ref, loc_ref,
+                         keep_ref, maxiou_scr, *, theta_loc, theta_iou,
+                         theta_back, frame_area, bm: int):
+    # same three-stage body as _filter_kernel, with a leading frame axis on
+    # the grid: blocks carry a size-1 frame dim, and the max-IoU scratch
+    # resets at the first M-tile of every (frame, N-tile) pair.  The grid
+    # iterates the last axis fastest, so the j sweep over M-tiles for one
+    # (f, i) is contiguous and the scratch accumulation stays private.
+    j = pl.program_id(2)
+    nm = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        maxiou_scr[...] = jnp.zeros_like(maxiou_scr)
+
+    iou = _iou_tile(prop_ref[0], acc_ref[0])              # (BN, BM)
+    iou = jnp.where(av_ref[0][None, :] > 0, iou, 0.0)
+    maxiou_scr[...] = jnp.maximum(maxiou_scr[...],
+                                  jnp.max(iou, axis=-1, keepdims=True))
+
+    @pl.when(j == nm - 1)
+    def _finalize():
+        p = prop_ref[0].astype(jnp.float32)
+        w = jnp.maximum(p[:, 2] - p[:, 0], 0.0)
+        h = jnp.maximum(p[:, 3] - p[:, 1], 0.0)
+        keep = (pv_ref[0] > 0) & (loc_ref[0] >= theta_loc)
+        keep &= maxiou_scr[...][:, 0] < theta_iou
+        keep &= (w * h / frame_area) <= theta_back
+        keep_ref[0] = keep.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "theta_loc", "theta_iou", "theta_back", "frame_area", "bn", "bm",
+    "interpret"))
+def region_filter_mask_batch(proposals, prop_valid, accepted, acc_valid,
+                             loc_scores, *, theta_loc: float,
+                             theta_iou: float, theta_back: float,
+                             frame_area: float = 1.0, bn: int = 128,
+                             bm: int = 128,
+                             interpret: bool = False) -> jax.Array:
+    """Whole-flush filter: (F, N, 4) proposals vs (F, M, 4) accepted.
+
+    One pallas_call over grid (F, N/BN, M/BM) replaces F per-frame kernel
+    launches (the vmapped form), so the fused ``cloud.detect_split`` stage
+    pays a single filtering pass for the packed cross-stream batch.
+    Bit-identical to vmapping :func:`region_filter_mask` over frames."""
+    f, n = proposals.shape[0], proposals.shape[1]
+    m = accepted.shape[1]
+    bn = min(bn, n)
+    bm = min(bm, m)
+    pn, pm = (-n) % bn, (-m) % bm
+    if pn:
+        proposals = jnp.pad(proposals, ((0, 0), (0, pn), (0, 0)))
+        prop_valid = jnp.pad(prop_valid, ((0, 0), (0, pn)))
+        loc_scores = jnp.pad(loc_scores, ((0, 0), (0, pn)))
+    if pm:
+        accepted = jnp.pad(accepted, ((0, 0), (0, pm), (0, 0)))
+        acc_valid = jnp.pad(acc_valid, ((0, 0), (0, pm)))
+
+    keep = pl.pallas_call(
+        functools.partial(_filter_kernel_batch, theta_loc=theta_loc,
+                          theta_iou=theta_iou, theta_back=theta_back,
+                          frame_area=frame_area, bm=bm),
+        grid=(f, (n + pn) // bn, (m + pm) // bm),
+        in_specs=[
+            pl.BlockSpec((1, bn, 4), lambda f_, i, j: (f_, i, 0)),
+            pl.BlockSpec((1, bn), lambda f_, i, j: (f_, i)),
+            pl.BlockSpec((1, bm, 4), lambda f_, i, j: (f_, j, 0)),
+            pl.BlockSpec((1, bm), lambda f_, i, j: (f_, j)),
+            pl.BlockSpec((1, bn), lambda f_, i, j: (f_, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda f_, i, j: (f_, i)),
+        out_shape=jax.ShapeDtypeStruct((f, n + pn), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bn, 1), jnp.float32)],
+        interpret=interpret,
+    )(proposals, prop_valid.astype(jnp.int32), accepted,
+      acc_valid.astype(jnp.int32), loc_scores)
+    return keep[:, :n].astype(bool)

@@ -111,6 +111,28 @@ def region_filter_mask(proposals, prop_valid, accepted, acc_valid, loc_scores,
         frame_area=frame_area, interpret=(impl == "interpret"))
 
 
+def region_filter_mask_batch(proposals, prop_valid, accepted, acc_valid,
+                             loc_scores, *, theta_loc: float,
+                             theta_iou: float, theta_back: float,
+                             frame_area: float = 1.0, impl: str = "ref"):
+    """Whole-flush §IV.B filter over a (F, N) region grid.
+
+    Kernel impls run ONE fused pallas_call over grid (F, N/BN, M/BM) —
+    the detect_split dispatch stops paying a per-frame filtering pass;
+    the ref oracle is the vmapped per-frame filter (bit-identical)."""
+    if impl in ("ref", "ref_unchunked"):
+        return jax.vmap(
+            lambda p, pv, a, av, ls: ref.region_filter_mask(
+                p, pv, a, av, ls, theta_loc=theta_loc, theta_iou=theta_iou,
+                theta_back=theta_back, frame_area=frame_area)
+        )(proposals, prop_valid, accepted, acc_valid, loc_scores)
+    from repro.kernels import iou_filter as ik
+    return ik.region_filter_mask_batch(
+        proposals, prop_valid, accepted, acc_valid, loc_scores,
+        theta_loc=theta_loc, theta_iou=theta_iou, theta_back=theta_back,
+        frame_area=frame_area, interpret=(impl == "interpret"))
+
+
 def crop_gather(frames, boxes, idxs, *, out_hw, impl: str = "ref"):
     """Compacted crop gather: (F,H,W,C) x (F,N,4) x (3,B) -> (B,oh,ow,C).
 

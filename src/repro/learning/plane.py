@@ -105,6 +105,15 @@ class LearningConfig:
     sentinel_mode: str = "uniform"
     sentinel_max_per_chunk: int = 4
     health_decay: float = 0.97
+    # drift-episode threshold adaptation: while a stream drives an open
+    # episode its detector acceptance thresholds (theta_cls / theta_loc)
+    # are overridden on the scheduler — a lower acceptance bar routes more
+    # uncertain regions to the fog classifier, exactly where the episode's
+    # label harvesting looks.  ``None`` (the default) leaves the global
+    # ProtocolConfig thresholds in place and is bit-compatible with the
+    # pre-adaptive scheduler.  Restored when the episode closes.
+    adapt_theta_cls: Optional[float] = None
+    adapt_theta_loc: Optional[float] = None
     drift: DriftConfig = field(default_factory=DriftConfig)
 
 
@@ -136,6 +145,9 @@ class _Site:
         self.ensemble_promotions = 0
         self.drifted: Set[str] = set()
         self.recovery_logged = False
+        # streams whose scheduler thresholds this site has overridden
+        # (LearningConfig.adapt_theta_*); restored on episode close
+        self.theta_overrides: Set[str] = set()
 
     def swap_target(self) -> Optional[str]:
         """hot_swap scope: the site's own stream, or None = every stream."""
@@ -433,6 +445,9 @@ class ContinualLearningPlane:
                     # episode's snapshot lineage
                     site.trainer.seed_snapshot(self._live_W(site),
                                                self._live_version(site))
+                # every drifted stream (episode opener or a later joiner)
+                # gets the adaptation thresholds while the episode runs
+                self._apply_theta(site, scheduler, stream.name, t)
 
         if site.state == "adapt":
             self._adapt_step(site, scheduler, stream, chunk, res, t,
@@ -505,6 +520,7 @@ class ContinualLearningPlane:
                 for s in recovered:
                     self.detector.rebaseline(s)
                     site.drifted.discard(s)
+                self._restore_theta(site, scheduler, t, streams=recovered)
                 if not site.drifted and not site.recovery_logged:
                     site.recovery_logged = True
                     self.monitor.log_event("recovered", t=t)
@@ -566,6 +582,10 @@ class ContinualLearningPlane:
                     snapshots=int(snaps.shape[0]), score=ens_acc,
                     live_score=live_acc, inflight=inflight,
                     pruned=n_fit - int(snaps.shape[0]))
+        # the episode's threshold overrides end with the episode: an
+        # exhausted site buys no more labels, and a recovered one is back
+        # at the bit-compatible defaults
+        self._restore_theta(site, scheduler, t)
         if reason == "budget":
             self.monitor.log_event("budget_exhausted", t=t,
                                    site=site.name or None,
@@ -582,6 +602,33 @@ class ContinualLearningPlane:
             site.recovery_logged = True
             self.monitor.log_event("recovered", t=t, site=site.name or None,
                                    ensemble_acc=ens_acc, live_acc=live_acc)
+
+    # ------------------------------------------------------------------
+    def _apply_theta(self, site: _Site, scheduler, stream_name: str,
+                     t: float) -> None:
+        """Override one drifted stream's detector thresholds for the
+        episode (no-op unless ``adapt_theta_*`` is configured)."""
+        cfg = self.cfg
+        if cfg.adapt_theta_cls is None and cfg.adapt_theta_loc is None:
+            return
+        if not hasattr(scheduler, "set_stream_thresholds"):
+            return
+        if stream_name in site.theta_overrides:
+            return
+        scheduler.set_stream_thresholds(stream_name,
+                                        theta_cls=cfg.adapt_theta_cls,
+                                        theta_loc=cfg.adapt_theta_loc, t=t)
+        site.theta_overrides.add(stream_name)
+
+    def _restore_theta(self, site: _Site, scheduler, t: float,
+                       streams=None) -> None:
+        """Put overridden streams back on the global defaults."""
+        names = (set(site.theta_overrides) if streams is None
+                 else site.theta_overrides & set(streams))
+        for s in sorted(names):
+            scheduler.set_stream_thresholds(s, theta_cls=None,
+                                            theta_loc=None, t=t)
+            site.theta_overrides.discard(s)
 
     # ------------------------------------------------------------------
     def _age_queue(self, W, t: float, site: Optional[_Site] = None) -> None:

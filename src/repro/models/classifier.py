@@ -52,15 +52,23 @@ def features(cfg: ClassifierConfig, params, crops: jax.Array) -> jax.Array:
 
 
 def classify(cfg: ClassifierConfig, params, crops: jax.Array,
-             W: jax.Array = None) -> Dict[str, jax.Array]:
+             W: jax.Array = None, impl: str = "ref"
+             ) -> Dict[str, jax.Array]:
     """Returns per-class one-vs-all scores + argmax prediction.
 
     ``W`` overrides ``params["W"]`` — this is how incremental-learning
     snapshots {W_t} are evaluated without rebuilding the params tree.
+    ``impl`` routes the one-vs-all head through the
+    :func:`repro.kernels.ops.onevsall_scores` knob: ``"ref"`` keeps the
+    inline sigmoid matmul; kernel impls run the fused Pallas head.
     """
     x = features(cfg, params, crops)
     w = params["W"] if W is None else W
-    scores = jax.nn.sigmoid(x @ w)                      # (b, C) binary probs
+    if impl in ("ref", "ref_unchunked"):
+        scores = jax.nn.sigmoid(x @ w)                  # (b, C) binary probs
+    else:
+        from repro.kernels import ops
+        scores = ops.onevsall_scores(x, w, impl=impl)
     return {"features": x, "scores": scores,
             "pred": jnp.argmax(scores, axis=-1),
             "confidence": jnp.max(scores, axis=-1)}

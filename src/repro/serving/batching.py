@@ -125,7 +125,8 @@ class CrossStreamBatcher:
     _seq: int = 0
     stats: Dict[str, float] = field(default_factory=lambda: {
         "batches": 0, "chunks": 0, "frames": 0, "padded_frames": 0,
-        "max_batch_chunks": 0, "deadline_flushes": 0, "requeued": 0})
+        "max_batch_chunks": 0, "deadline_flushes": 0, "requeued": 0,
+        "stolen": 0, "adopted": 0})
 
     def submit(self, req: DetectRequest) -> None:
         if req.seq < 0:
@@ -201,6 +202,30 @@ class CrossStreamBatcher:
         if any(r.deadline is not None for r in batch):
             self.stats["deadline_flushes"] += 1
         return batch
+
+    def steal_due(self, now: float, keep: int) -> List[DetectRequest]:
+        """Remove due requests beyond the ``keep`` this shard will flush.
+
+        Work-stealing support (ShardedScheduler): when more requests are
+        due at ``now`` than one flush can take, the overflow — in WFQ
+        order, so the keep-set is exactly what ``take(now)`` would pick —
+        moves atomically to an idle shard's batcher via :meth:`adopt`.
+        Each request's arrival/vft/seq travel with it, so fair-queueing
+        position and requeue gates are preserved wherever it lands."""
+        arrived = sorted(self._arrived(now), key=self._order)
+        if len(arrived) <= keep:
+            return []
+        out = arrived[keep:]
+        for r in out:
+            self._queue.remove(r)
+        self.stats["stolen"] += len(out)
+        return out
+
+    def adopt(self, reqs: List[DetectRequest]) -> None:
+        """Accept requests stolen from another shard's batcher as-is
+        (no re-submit bookkeeping: vft/seq/arrival are already set)."""
+        self._queue.extend(reqs)
+        self.stats["adopted"] += len(reqs)
 
     @property
     def pending_frames(self) -> int:

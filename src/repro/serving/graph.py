@@ -18,7 +18,12 @@ so N camera streams advance concurrently on one simulated timeline.  The
 cloud-detector stage runs through a :class:`CrossStreamBatcher` that packs
 frames from concurrent chunks into padded jit'd calls (Tangram-style
 batched serverless inference) and feeds the *real* queue depth to the
-autoscaler on every dispatch.
+autoscaler on every dispatch.  At fleet scale the event loop is no longer
+one heap: :class:`~repro.serving.shards.ShardedScheduler` runs K of these
+schedulers over disjoint stream sets on a merged timeline, and with a
+claim-check :class:`~repro.serving.ingest.ArtifactStore` attached the
+queued events carry payload *references* instead of frame tensors —
+resolved once per flush, at assembly time (see ``_dispatch``).
 
 The serving plane is **SLO-aware and multi-replica**: streams carry a
 per-chunk latency SLO (deadline-driven flush — the batch is held open only
@@ -52,8 +57,10 @@ bit-for-bit, results are identical to ``HighLowProtocol.process_chunk``.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import itertools
+import sys
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -71,6 +78,7 @@ from repro.core.protocol import ChunkResult, HighLowProtocol
 from repro.serving.batching import (CrossStreamBatcher, DetectRequest,
                                     pack_frames, pack_frames_device)
 from repro.serving.executor import Executor
+from repro.serving.ingest import ArtifactStore, ClaimCheck, content_key
 from repro.serving.monitor import Monitor
 from repro.serving.registry import Dispatcher, FunctionRegistry, ModelZoo
 from repro.serving.router import Router
@@ -78,13 +86,16 @@ from repro.serving.router import Router
 STAGE_ENCODE = "fog.encode_low"
 STAGE_DETECT = "cloud.detect"
 STAGE_DETECT_SPLIT = "cloud.detect_split"      # fused detect + §IV.B split
+STAGE_DETECT_SPLIT_DON = "cloud.detect_split_donated"  # donates the batch
+STAGE_DETECT_SPLIT_DYN = "cloud.detect_split_dynamic"  # per-frame thetas
 STAGE_CLASSIFY = "fog.classify_regions"
 STAGE_CLASSIFY_BATCH = "fog.classify_batched"  # compacted cross-stream
 STAGE_CLASSIFY_ENS = "fog.classify_ensemble"   # Eq. 9 snapshot ensemble
 STAGE_CLASSIFY_ENS_BATCH = "fog.classify_ensemble_batched"
 STAGE_CLASSIFY_VIEW = "fog.classify_view"      # per-stream slice accounting
 STAGE_COLLECT = "hitl.collect"
-STAGES = (STAGE_ENCODE, STAGE_DETECT, STAGE_DETECT_SPLIT, STAGE_CLASSIFY,
+STAGES = (STAGE_ENCODE, STAGE_DETECT, STAGE_DETECT_SPLIT,
+          STAGE_DETECT_SPLIT_DON, STAGE_DETECT_SPLIT_DYN, STAGE_CLASSIFY,
           STAGE_CLASSIFY_BATCH, STAGE_CLASSIFY_ENS, STAGE_CLASSIFY_ENS_BATCH,
           STAGE_CLASSIFY_VIEW, STAGE_COLLECT)
 
@@ -110,6 +121,14 @@ class VideoFunctionGraph:
         self.registry.register(STAGE_DETECT_SPLIT, self._detect_split,
                                kind="inference", tier="cloud",
                                batchable=True, fused=True)
+        self.registry.register(STAGE_DETECT_SPLIT_DON,
+                               self._detect_split_donated,
+                               kind="inference", tier="cloud",
+                               batchable=True, fused=True)
+        self.registry.register(STAGE_DETECT_SPLIT_DYN,
+                               self._detect_split_dynamic,
+                               kind="inference", tier="cloud",
+                               batchable=True, fused=True)
         self.registry.register(STAGE_CLASSIFY, self._classify,
                                kind="inference", tier="fog")
         self.registry.register(STAGE_CLASSIFY_BATCH, self._classify_batched,
@@ -131,6 +150,8 @@ class VideoFunctionGraph:
         self.dispatcher = Dispatcher(self.registry, self.zoo)
         self.dispatcher.dispatch("cloud", STAGE_DETECT)
         self.dispatcher.dispatch("cloud", STAGE_DETECT_SPLIT)
+        self.dispatcher.dispatch("cloud", STAGE_DETECT_SPLIT_DON)
+        self.dispatcher.dispatch("cloud", STAGE_DETECT_SPLIT_DYN)
         self.dispatcher.dispatch("cloud", "cloud-detector")
         for name in (STAGE_ENCODE, STAGE_CLASSIFY, STAGE_CLASSIFY_BATCH,
                      STAGE_CLASSIFY_ENS, STAGE_CLASSIFY_ENS_BATCH,
@@ -150,6 +171,16 @@ class VideoFunctionGraph:
         return protocol_mod.detect_split(self.protocol.det_cfg,
                                          self.protocol.pcfg,
                                          self.det_params, frames)
+
+    def _detect_split_donated(self, frames):
+        return protocol_mod.detect_split_donated(self.protocol.det_cfg,
+                                                 self.protocol.pcfg,
+                                                 self.det_params, frames)
+
+    def _detect_split_dynamic(self, frames, theta_cls, theta_loc):
+        return protocol_mod.detect_split_dynamic(
+            self.protocol.det_cfg, self.protocol.pcfg, self.det_params,
+            frames, theta_cls, theta_loc)
 
     def _classify_batched(self, frames_hq, split, Ws, idxs):
         return protocol_mod.classify_compacted(
@@ -219,6 +250,16 @@ class StreamState:
     # tighter margin -> more batching; misses -> margin widens fast)
     slo_margin: float = 0.1
     att_ewma: float = 1.0
+    # owning shard scheduler (ShardedScheduler): a finalize that runs on a
+    # stealing shard must hand the stream's next ingest back to its owner's
+    # event loop, not the thief's.  None = the single-scheduler case.
+    owner: Any = None
+    # per-site detector thresholds (drift adaptation): None = the global
+    # ProtocolConfig value, so defaults stay bit-compatible.  A flush whose
+    # streams all use defaults takes the static fused stage; any override
+    # routes through cloud.detect_split_dynamic with per-frame thetas.
+    theta_cls: Optional[float] = None
+    theta_loc: Optional[float] = None
     pending: Deque[Tuple[Any, bool]] = field(default_factory=deque)
     results: List[Tuple[Any, ChunkResult, str]] = field(default_factory=list)
     # Eq. 9 ensemble serving: when set, the stream's classify stage scores
@@ -415,7 +456,11 @@ class GraphScheduler:
                  hot_path: str = "fused",
                  crop_buckets: Tuple[int, ...] = (4, 8, 16, 32, 64, 128),
                  max_retained_bundles: Optional[int] = 256,
-                 fault=None, fallback_fn: Optional[Callable] = None):
+                 fault=None, fallback_fn: Optional[Callable] = None,
+                 router: Optional[Router] = None,
+                 seq_counter=None,
+                 store: Optional[ArtifactStore] = None,
+                 pick_policy: str = "least"):
         assert hot_path in ("fused", "sync")
         proto = graph.protocol
         self.graph = graph
@@ -433,13 +478,26 @@ class GraphScheduler:
                             graph.registry, proto.cloud,
                             num_devices=cloud_devices)
 
-        replicas = [_make_replica(i) for i in range(max(1, cloud_replicas))]
-        self.cloud_executor = replicas[0]       # primary (never retired)
-        self.router = Router(replicas, monitor=self.monitor,
-                             autoscaler=autoscaler, scale_unit=scale_unit,
-                             replica_factory=_make_replica,
-                             cold_start_s=cold_start_s)
+        if router is not None:
+            # sharded mode: every shard dispatches into ONE shared detector
+            # replica pool (and one autoscaler) instead of building its own
+            self.router = router
+            self.cloud_executor = router.replicas[0].executor
+        else:
+            replicas = [_make_replica(i)
+                        for i in range(max(1, cloud_replicas))]
+            self.cloud_executor = replicas[0]   # primary (never retired)
+            self.router = Router(replicas, monitor=self.monitor,
+                                 autoscaler=autoscaler,
+                                 scale_unit=scale_unit,
+                                 replica_factory=_make_replica,
+                                 cold_start_s=cold_start_s,
+                                 pick_policy=pick_policy)
         self.autoscaler = autoscaler
+        # claim-check plane: when set, _arrive publishes the encoded chunk
+        # here and the batcher queue holds only ClaimCheck references; the
+        # payloads are resolved (and the claims released) in _dispatch
+        self.store = store
         self.deadline_batching = deadline_batching
         # headroom fraction of the SLO held back when deriving the detect
         # deadline: estimates (service time, downstream work, device wait)
@@ -464,7 +522,16 @@ class GraphScheduler:
                                 + proto.fog.classify_time(8))
         self.streams: Dict[str, StreamState] = {}
         self._events: List[Tuple[float, int, str, dict]] = []
-        self._seq = itertools.count()
+        # shards share one counter so same-time events across shard heaps
+        # keep a global, deterministic tie-break order
+        self._seq = seq_counter if seq_counter is not None \
+            else itertools.count()
+        # event-loop wall accounting: step_wall_s brackets every step();
+        # model_wall_s brackets _dispatch (payload assembly + model calls),
+        # so (step - model) / finalizes is the per-chunk *scheduling*
+        # overhead — the flatness metric gated by bench_shard_scale
+        self.sched_stats = {"events": 0, "finalizes": 0,
+                            "step_wall_s": 0.0, "model_wall_s": 0.0}
         # wall-clock accounting for the jit'd detect stage (throughput lever)
         self.detect_stats = {"calls": 0, "frames": 0, "padded_frames": 0,
                              "wall_s": 0.0}
@@ -479,6 +546,14 @@ class GraphScheduler:
         # full-budget classify + block_until_ready) for A/B benchmarking.
         self.hot_path = hot_path
         self.crop_buckets = crop_buckets
+        # donate the packed detect batch to the fused jit on accelerator
+        # backends: the multi-request concat buffer is dispatch-owned and
+        # dead after the call, so XLA may reuse it in place.  CPU leaves
+        # donation a warning-level no-op, so CI keeps the plain stage; the
+        # single-request pass-through (an encode-output / store-held array)
+        # is never donated regardless of the flag.
+        self.donate_detect = (hot_path == "fused"
+                              and jax.default_backend() != "cpu")
         # shared executor for the compacted cross-stream classify call (the
         # per-stream share is accounted on each stream's own fog executor)
         self.fog_batch_exec = Executor("fog-batch", graph.registry, proto.fog)
@@ -546,32 +621,68 @@ class GraphScheduler:
             return
         chunk, learn = stream.pending.popleft()
         stream.busy = True
-        self._push(stream.clock, "ingest",
-                   dict(stream=stream, chunk=chunk, learn=learn))
+        # sharded mode: the next ingest belongs on the owner shard's event
+        # loop even when this finalize ran on a stealing shard
+        owner = stream.owner if stream.owner is not None else self
+        owner._push(stream.clock, "ingest",
+                    dict(stream=stream, chunk=chunk, learn=learn))
 
     def _push(self, t: float, action: str, data: dict) -> None:
         heapq.heappush(self._events, (t, next(self._seq), action, data))
 
     # ------------------------------------------------------------------
+    def has_work(self) -> bool:
+        return bool(self._events) or len(self.batcher) > 0
+
+    def _peek_key(self) -> Optional[Tuple[float, int]]:
+        """(t, seq) of this scheduler's next event, or None when idle.
+
+        The stranded-request safety net (requests queued but no event —
+        guards any residual deadline arithmetic slip) surfaces as a
+        max-seq key at the batcher's deadline, so a merged multi-shard
+        loop orders it after every real event at that time."""
+        if self._events:
+            ev = self._events[0]
+            return (ev[0], ev[1])
+        if len(self.batcher):
+            nd = self.batcher.next_deadline()
+            return (nd if nd is not None else 0.0, sys.maxsize)
+        return None
+
+    def step(self) -> bool:
+        """Process ONE event (or the safety net); False when fully idle.
+
+        ``run_until_idle`` is ``while step()`` — the ShardedScheduler
+        interleaves steps of K of these loops on a merged timeline."""
+        if not self._events:
+            if not len(self.batcher):
+                return False
+            w0 = time.perf_counter()
+            # safety net: no event left but requests still queued — a
+            # stranded request must never be silently dropped
+            t = self.batcher.next_deadline()
+            self._run_batch(t, self.batcher.take(t))
+            self.sched_stats["events"] += 1
+            self.sched_stats["step_wall_s"] += time.perf_counter() - w0
+            return True
+        w0 = time.perf_counter()
+        t, _, action, data = heapq.heappop(self._events)
+        if action == "ingest":
+            self._ingest(t, **data)
+        elif action == "arrive":
+            self._arrive(t, **data)
+        elif action == "flush":
+            self._flush(t)
+        else:
+            self._finalize(t, data)
+        self.sched_stats["events"] += 1
+        self.sched_stats["step_wall_s"] += time.perf_counter() - w0
+        return True
+
     def run_until_idle(self) -> None:
         """Drain the event queue (all submitted chunks reach finalize)."""
-        while self._events or len(self.batcher):
-            if not self._events:
-                # safety net: no event left but requests still queued
-                # (guards against any residual deadline arithmetic slip —
-                # a stranded request must never be silently dropped)
-                t = self.batcher.next_deadline()
-                self._run_batch(t, self.batcher.take(t))
-                continue
-            t, _, action, data = heapq.heappop(self._events)
-            if action == "ingest":
-                self._ingest(t, **data)
-            elif action == "arrive":
-                self._arrive(t, **data)
-            elif action == "flush":
-                self._flush(t)
-            else:
-                self._finalize(t, data)
+        while self.step():
+            pass
 
     # ------------------------------------------------------------------
     def _ingest(self, t: float, stream: StreamState, chunk,
@@ -608,6 +719,14 @@ class GraphScheduler:
         arrival = t + qc + wan_up
         frames = (enc.frames if self.hot_path == "fused"
                   else np.asarray(enc.frames))
+        if self.store is not None:
+            # claim-check publish: the encoded frames enter the artifact
+            # store once (content-addressed — a pooled chunk re-published
+            # by any stream dedups to one payload) and the batcher queue
+            # entry carries only the reference; _dispatch resolves it at
+            # flush-assembly time and releases the claim after dispatch
+            frames = self.store.put(frames, key=self._artifact_key(chunk),
+                                    now=t)
         req = DetectRequest(
             frames=frames, arrival=arrival, stream=stream,
             weight=stream.weight,
@@ -621,6 +740,28 @@ class GraphScheduler:
         nd = self.batcher.next_deadline()
         if nd is not None and nd > arrival + 1e-12:
             self._push(nd, "flush", {})
+
+    def _artifact_key(self, chunk) -> str:
+        """Content address of a chunk's encoded payload.
+
+        Digest of the *source* HQ host bytes plus the encode parameters
+        (hashing the encoded device array would cost a device->host sync).
+        Encoding is deterministic, so equal keys imply bitwise-equal
+        payloads and dedup is safe.  Memoized on the chunk object; the
+        cached key is salt-checked so one chunk shared across schedulers
+        with different encode configs never aliases."""
+        pcfg = self.graph.protocol.pcfg
+        salt = (f"{pcfg.r_low}:{pcfg.q_low}:{int(pcfg.inter_coding)}:"
+                f"{self.hot_path}")
+        cached = getattr(chunk, "_artifact_key", None)
+        if cached is not None and cached[0] == salt:
+            return cached[1]
+        key = content_key(np.asarray(chunk.frames), salt)
+        try:
+            chunk._artifact_key = (salt, key)
+        except (AttributeError, TypeError):
+            pass                        # unmemoizable chunk type: rehash
+        return key
 
     def _flush(self, t: float) -> None:
         while self.batcher.ready(t):
@@ -661,6 +802,8 @@ class GraphScheduler:
         if self.fallback_fn is None:
             raise RuntimeError("no healthy replicas and no fog fallback")
         for req in reqs:
+            if self.store is not None and isinstance(req.frames, ClaimCheck):
+                self.store.release(req.frames, now=t)
             chunk = req.meta["chunk"]
             res = self.fallback_fn(chunk.frames)
             self._push(t + res.latency.total, "finalize",
@@ -670,6 +813,7 @@ class GraphScheduler:
 
     def _dispatch(self, t: float, reqs: List[DetectRequest]) -> None:
         proto = self.graph.protocol
+        m0 = time.perf_counter()
         # pick a replica; health-check it against the fault schedule first
         # (the schedule is keyed by the replica's stable uid, not its pool
         # position — positions shift when the autoscaler resizes the pool)
@@ -685,12 +829,20 @@ class GraphScheduler:
                 continue
             break
         fused = self.hot_path == "fused"
+        # claim-check resolve: flush assembly is the ONE place payloads are
+        # pulled from the store.  A single-request flush passes the stored
+        # array object straight through pack_frames_device, preserving the
+        # zero-copy identity shortcut.
+        if self.store is not None:
+            payloads = [self.store.get(r.frames) for r in reqs]
+        else:
+            payloads = [r.frames for r in reqs]
         if fused:
             batch, slices, pad = pack_frames_device(
-                [r.frames for r in reqs], buckets=self.batcher.pad_buckets)
+                payloads, buckets=self.batcher.pad_buckets)
         else:
             batch, slices, pad = pack_frames(
-                [np.asarray(r.frames) for r in reqs],
+                [np.asarray(p) for p in payloads],
                 buckets=self.batcher.pad_buckets)
         n_frames = batch.shape[0]
         svc = proto.cloud.detect_time(n_frames)
@@ -703,7 +855,9 @@ class GraphScheduler:
                 # the replica dies while this sub-batch is in service: its
                 # work is lost, the outage is detected at the failure time,
                 # and the chunks re-queue to surviving replicas (arrival and
-                # fair-queueing position preserved — nothing is dropped)
+                # fair-queueing position preserved — nothing is dropped).
+                # Their claims were not released, so the re-flush resolves
+                # the same stored payloads again.
                 self.router.mark_unhealthy(idx)
                 self.fault.note_replica_failure(uid, fail_t,
                                                 requeued=len(reqs))
@@ -712,6 +866,12 @@ class GraphScheduler:
                     self.batcher.submit(r)
                 self._push(fail_t, "flush", {})
                 return
+        if self.store is not None:
+            # dispatch is committed: the batch owns the frame data now, so
+            # the claims drop and idle payloads age toward TTL eviction
+            for r in reqs:
+                self.store.release(r.frames, now=t)
+            self.store.sweep(t)
         # real queue depth (frames still waiting / in flight to the cloud)
         queue_depth = self.batcher.pending_frames
         self.hot_path_stats["flushes"] += 1
@@ -721,6 +881,7 @@ class GraphScheduler:
         else:
             self._dispatch_sync(t, reqs, slices, pad, batch, svc, idx,
                                 queue_depth)
+        self.sched_stats["model_wall_s"] += time.perf_counter() - m0
 
     def _dispatch_sync(self, t: float, reqs: List[DetectRequest], slices,
                        pad: int, batch, svc: float, idx: int,
@@ -746,7 +907,21 @@ class GraphScheduler:
 
         for req, sl in zip(reqs, slices):
             det_i = {k: v[sl] for k, v in det.items()}
-            split, coord_bytes = protocol_mod.split_uncertain(proto.pcfg,
+            pcfg_req = proto.pcfg
+            if (req.stream.theta_cls is not None
+                    or req.stream.theta_loc is not None):
+                # per-site thresholds: a frozen-config replace stays
+                # hashable, so the handful of distinct per-site configs
+                # each compile split_uncertain once
+                pcfg_req = dataclasses.replace(
+                    pcfg_req,
+                    theta_cls=(req.stream.theta_cls
+                               if req.stream.theta_cls is not None
+                               else pcfg_req.theta_cls),
+                    theta_loc=(req.stream.theta_loc
+                               if req.stream.theta_loc is not None
+                               else pcfg_req.theta_loc))
+            split, coord_bytes = protocol_mod.split_uncertain(pcfg_req,
                                                               det_i)
             wan_down = self.network.wan_time(float(coord_bytes))
             n_crops = int(np.sum(np.asarray(split.prop_valid)))
@@ -797,9 +972,34 @@ class GraphScheduler:
         proto = self.graph.protocol
         n_frames = batch.shape[0]
         w0 = time.perf_counter()
-        split, done, _ = self.router.route(
-            STAGE_DETECT_SPLIT, batch, now=t, model_time=svc,
-            queue_depth=queue_depth, replica=idx)
+        dyn = any(r.stream.theta_cls is not None
+                  or r.stream.theta_loc is not None for r in reqs)
+        if dyn:
+            # per-site thresholds in play: per-frame theta vectors ride
+            # into the dynamic fused stage as traced args (thetas only
+            # enter elementwise comparisons, so tracing them is exact);
+            # detector pad rows keep the global defaults
+            tc = np.full(n_frames, proto.pcfg.theta_cls, np.float32)
+            tl = np.full(n_frames, proto.pcfg.theta_loc, np.float32)
+            for r, sl in zip(reqs, slices):
+                if r.stream.theta_cls is not None:
+                    tc[sl] = r.stream.theta_cls
+                if r.stream.theta_loc is not None:
+                    tl[sl] = r.stream.theta_loc
+            split, done, _ = self.router.route(
+                STAGE_DETECT_SPLIT_DYN, batch, jnp.asarray(tc),
+                jnp.asarray(tl), now=t, model_time=svc,
+                queue_depth=queue_depth, replica=idx)
+        else:
+            # donate the packed batch only when it is the dispatch-owned
+            # multi-request concat; a single-request flush passes the
+            # encode-output / store-held array through untouched
+            stage = (STAGE_DETECT_SPLIT_DON
+                     if self.donate_detect and len(reqs) > 1
+                     else STAGE_DETECT_SPLIT)
+            split, done, _ = self.router.route(
+                stage, batch, now=t, model_time=svc,
+                queue_depth=queue_depth, replica=idx)
         # THE flush's single blocking device->host read: per-chunk coord
         # bytes, crop counts, and the compaction gather plan are all
         # derived from this one (F, N) bool mask on the host
@@ -925,6 +1125,7 @@ class GraphScheduler:
     def _finalize(self, t: float, data: dict) -> None:
         stream, chunk = data["stream"], data["chunk"]
         res = data["res"]
+        self.sched_stats["finalizes"] += 1
         if data.get("inflight"):
             # retire the in-flight future: its arrays stay device-side in
             # the flush bundle until a consumer touches a field, so the
@@ -1054,6 +1255,25 @@ class GraphScheduler:
                                stream=stream)
         return inflight
 
+    def set_stream_thresholds(self, stream: str, *,
+                              theta_cls: Optional[float] = None,
+                              theta_loc: Optional[float] = None,
+                              t: Optional[float] = None) -> None:
+        """Override one stream's detector split thresholds mid-run.
+
+        ``None`` restores the global :class:`ProtocolConfig` default for
+        that threshold (the bit-compatible state).  Chunks already past
+        their detect dispatch keep the thresholds they ran with; the next
+        flush containing this stream routes through the dynamic fused
+        stage (or a per-site config replace on the sync path)."""
+        st = self.streams[stream]
+        st.theta_cls = theta_cls
+        st.theta_loc = theta_loc
+        self.monitor.log_event("stream_thresholds",
+                               t=t if t is not None else 0.0,
+                               stream=stream, theta_cls=theta_cls,
+                               theta_loc=theta_loc)
+
     def hot_swap_ensemble(self, snaps, omega, *, version=None,
                           t: Optional[float] = None,
                           stream: Optional[str] = None) -> int:
@@ -1100,6 +1320,16 @@ class GraphScheduler:
                 1.0 - hps["crops_classified"] / hps["crops_budget"])
         d["w_uploads"] = sum(s.w_uploads for s in self.streams.values())
         d["e_uploads"] = sum(s.e_uploads for s in self.streams.values())
+        ss = self.sched_stats
+        d.update({f"sched_{k}": v for k, v in ss.items()})
+        if ss["finalizes"]:
+            # event-loop wall net of payload assembly + model dispatch,
+            # amortized per finalized chunk: the fleet-scale flatness metric
+            d["sched_overhead_per_chunk_s"] = (
+                max(0.0, ss["step_wall_s"] - ss["model_wall_s"])
+                / ss["finalizes"])
+        if self.store is not None:
+            d["store"] = self.store.report()
         # per-field lazy-result ledger: which result fields were actually
         # downloaded (a HITL-off run must never pay for fog_features)
         d["field_downloads"] = dict(self.field_downloads)

@@ -1,0 +1,199 @@
+"""Claim-check ingestion plane: a simulated content-addressed artifact store.
+
+At fleet scale the scheduler's event heap must stay cheap: a heap entry that
+drags a multi-megabyte frame tensor around is a per-stream memory tax and a
+copy hazard every time an event is requeued, stolen, or replayed.  The
+claim-check pattern (FAVE; Kinesis->Lambda->S3 pipelines) splits the two
+planes: streams *publish* their encoded chunk once into an artifact store,
+and every scheduler event — batcher queue entries, flush events, replica
+requeues, cross-shard steals — carries only a :class:`ClaimCheck` reference.
+The payload is resolved exactly once per dispatch, at flush-assembly time,
+which preserves the fused hot path's one-upload-per-flush property (the
+single-request fast path still hands the *stored array object* to
+``pack_frames_device``, so the pass-through identity shortcut survives).
+
+The store is content-addressed: the key is a digest of the source chunk's
+host bytes plus the encode parameters, so a stream (or several streams fed
+from a shared chunk pool) that re-publishes an identical chunk dedups to one
+stored payload with a bumped ref-count.  Encoding is deterministic, so the
+dedup is bitwise-safe.  Byte accounting tracks both the *physical* store
+footprint (unique payloads) and the *logical* footprint (sum over
+outstanding claims) — the latter is what the event heap would be holding
+without the store, and the gap between the two is the claim-check win
+reported by ``bench_shard_scale``.
+
+Eviction is ref-count + TTL: a payload becomes a candidate only once every
+claim against it has been released, and is swept after ``ttl`` simulated
+seconds of sitting unreferenced (so a re-publish of a pooled chunk inside
+the TTL window is a dedup hit, not a re-upload).  A referenced payload is
+never evicted, regardless of age — `tests/test_shards.py` pins that down.
+Sweeping is O(1) amortised via an expiry deque rather than a full scan, so
+the store never re-introduces the O(#streams) per-event cost that sharding
+removes from the batcher.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["ClaimCheck", "ArtifactStore", "content_key"]
+
+
+def content_key(host_bytes: Any, salt: str = "") -> str:
+    """Digest of a host-side buffer (bytes or ndarray) plus a salt.
+
+    The salt discriminates payload *derivations* of the same source bytes
+    (e.g. different encode parameters).  Device arrays must be converted by
+    the caller — hashing one here would force a hidden device->host sync.
+    """
+    if isinstance(host_bytes, np.ndarray):
+        host_bytes = np.ascontiguousarray(host_bytes).tobytes()
+    h = hashlib.blake2b(digest_size=16)
+    h.update(host_bytes)
+    if salt:
+        h.update(salt.encode())
+    return h.hexdigest()
+
+
+@dataclass(frozen=True)
+class ClaimCheck:
+    """Lightweight reference to a stored payload.
+
+    Carries the shape/dtype/nbytes metadata the scheduler needs for batch
+    planning (frame counts, pad buckets, WAN accounting) so no event handler
+    has to touch the payload — or the store — before flush assembly.
+    """
+    key: str
+    shape: Tuple[int, ...]
+    dtype: Any
+    nbytes: int
+
+
+@dataclass
+class _Entry:
+    payload: Any
+    nbytes: int
+    refs: int = 0
+    # stamp of the release that made refs hit 0; an expiry-deque record is
+    # only honoured when its stamp still matches (a re-acquire in between
+    # invalidates the old record)
+    idle_since: float = 0.0
+    idle_stamp: int = 0
+
+
+@dataclass
+class ArtifactStore:
+    """Simulated content-addressed artifact store with ref-count+TTL GC."""
+
+    ttl: float = 30.0
+
+    _entries: Dict[str, _Entry] = field(default_factory=dict)
+    # (expire_t, key, idle_stamp) records; lazily validated on sweep
+    _expiry: Deque[Tuple[float, str, int]] = field(default_factory=deque)
+    stats: Dict[str, float] = field(default_factory=lambda: {
+        "puts": 0,            # claims issued
+        "unique_puts": 0,     # payloads physically stored
+        "dedup_hits": 0,      # claims satisfied by an existing payload
+        "gets": 0,            # payload resolutions (flush assembly)
+        "releases": 0,
+        "evictions": 0,
+        "bytes_current": 0.0,         # physical: unique payload bytes
+        "bytes_peak": 0.0,
+        "logical_bytes_current": 0.0,  # what the event heap would hold
+        "logical_bytes_peak": 0.0,
+    })
+
+    # -- publish ---------------------------------------------------------
+    def put(self, payload: Any, *, key: str, nbytes: Optional[int] = None,
+            now: float = 0.0) -> ClaimCheck:
+        """Publish ``payload`` under ``key``; returns a claim against it.
+
+        A second put of the same key is a dedup hit: the new payload object
+        is dropped and the existing one gains a reference (safe because keys
+        are content digests of a deterministic encode).  ``nbytes`` defaults
+        to the payload's buffer size computed from shape/dtype — never from
+        the device buffer itself.
+        """
+        shape = tuple(getattr(payload, "shape", ()))
+        dtype = getattr(payload, "dtype", None)
+        if nbytes is None:
+            itemsize = np.dtype(dtype).itemsize if dtype is not None else 1
+            nbytes = int(np.prod(shape, dtype=np.int64)) * itemsize if shape \
+                else int(itemsize)
+        ent = self._entries.get(key)
+        if ent is None:
+            ent = _Entry(payload=payload, nbytes=int(nbytes))
+            self._entries[key] = ent
+            self.stats["unique_puts"] += 1
+            self.stats["bytes_current"] += ent.nbytes
+            self.stats["bytes_peak"] = max(self.stats["bytes_peak"],
+                                           self.stats["bytes_current"])
+        else:
+            self.stats["dedup_hits"] += 1
+        ent.refs += 1
+        ent.idle_stamp += 1  # invalidate any pending expiry record
+        self.stats["puts"] += 1
+        self.stats["logical_bytes_current"] += int(nbytes)
+        self.stats["logical_bytes_peak"] = max(
+            self.stats["logical_bytes_peak"],
+            self.stats["logical_bytes_current"])
+        return ClaimCheck(key=key, shape=shape, dtype=dtype,
+                          nbytes=int(nbytes))
+
+    # -- resolve ---------------------------------------------------------
+    def get(self, ref: ClaimCheck) -> Any:
+        """Resolve a claim to the stored payload object (no copy)."""
+        ent = self._entries.get(ref.key)
+        if ent is None:
+            raise KeyError(f"artifact {ref.key!r} not in store "
+                           "(evicted while referenced?)")
+        self.stats["gets"] += 1
+        return ent.payload
+
+    def release(self, ref: ClaimCheck, now: float = 0.0) -> None:
+        """Drop one claim; the payload becomes evictable once refs hit 0."""
+        ent = self._entries.get(ref.key)
+        if ent is None or ent.refs <= 0:
+            raise KeyError(f"release of unheld artifact {ref.key!r}")
+        ent.refs -= 1
+        self.stats["releases"] += 1
+        self.stats["logical_bytes_current"] -= ref.nbytes
+        if ent.refs == 0:
+            ent.idle_since = now
+            ent.idle_stamp += 1
+            self._expiry.append((now + self.ttl, ref.key, ent.idle_stamp))
+
+    # -- GC --------------------------------------------------------------
+    def sweep(self, now: float) -> int:
+        """Evict payloads unreferenced for >= ttl; O(1) amortised."""
+        evicted = 0
+        while self._expiry and self._expiry[0][0] <= now:
+            _, key, stamp = self._expiry.popleft()
+            ent = self._entries.get(key)
+            # honour the record only if the entry is still idle *from the
+            # same release*: a referenced payload is never evicted
+            if ent is not None and ent.refs == 0 and ent.idle_stamp == stamp:
+                del self._entries[key]
+                self.stats["evictions"] += 1
+                self.stats["bytes_current"] -= ent.nbytes
+                evicted += 1
+        return evicted
+
+    # -- introspection ---------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def refs(self, key: str) -> int:
+        ent = self._entries.get(key)
+        return ent.refs if ent is not None else 0
+
+    def report(self) -> Dict[str, float]:
+        out = dict(self.stats)
+        out["entries"] = float(len(self._entries))
+        out["bytes_saved_peak"] = (out["logical_bytes_peak"]
+                                   - out["bytes_peak"])
+        return out

@@ -6,11 +6,22 @@ Scaling has two units: ``scale_unit="devices"`` grows the picked replica's
 simulated device pool in place (the pre-SLO behaviour), while
 ``scale_unit="replicas"`` adds/removes whole executor replicas through
 ``replica_factory`` — the cloud ML server's autoscaled replica pool, which
-the graph scheduler shards batches across."""
+the graph scheduler shards batches across.
+
+Two pick policies: ``"least"`` scans every healthy replica for the lowest
+(inflight, earliest-free-device) load — exact, but O(R) of *coordinated*
+state per dispatch, which is the contended read when many scheduler shards
+share one pool.  ``"p2c"`` is power-of-two-choices: sample two distinct
+healthy replicas and take the less loaded, which keeps max load within
+O(log log R) of optimal while touching only two replicas' state.  The
+sample stream is seeded and deterministic, so sharded runs stay
+reproducible; with a single replica both policies degenerate to it."""
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.serving.autoscaler import Autoscaler
 from repro.serving.executor import Executor
@@ -34,8 +45,12 @@ class Router:
                  autoscaler: Optional[Autoscaler] = None,
                  scale_unit: str = "devices",
                  replica_factory: Optional[Callable[[int], Executor]] = None,
-                 cold_start_s: float = 0.0):
+                 cold_start_s: float = 0.0,
+                 pick_policy: str = "least", pick_seed: int = 0):
         assert scale_unit in ("devices", "replicas")
+        assert pick_policy in ("least", "p2c")
+        self.pick_policy = pick_policy
+        self._pick_rng = np.random.default_rng(pick_seed)
         self.replicas = [Replica(e, uid=i) for i, e in enumerate(replicas)]
         self._next_uid = len(self.replicas)
         self.monitor = monitor or Monitor()
@@ -61,11 +76,19 @@ class Router:
         return sum(r.healthy for r in self.replicas)
 
     def pick(self) -> Optional[int]:
-        # least-loaded: fewest inflight, then earliest-free device
-        load = [(r.inflight, min(r.executor.busy_until), i)
-                for i, r in enumerate(self.replicas) if r.healthy]
-        if not load:
+        healthy = [i for i, r in enumerate(self.replicas) if r.healthy]
+        if not healthy:
             return None
+        if self.pick_policy == "p2c" and len(healthy) > 2:
+            # power-of-two-choices on queue depth: two deterministic
+            # samples, pick the less loaded of the pair
+            a, b = self._pick_rng.choice(len(healthy), size=2,
+                                         replace=False)
+            healthy = [healthy[int(a)], healthy[int(b)]]
+        # least-loaded: fewest inflight, then earliest-free device
+        load = [(self.replicas[i].inflight,
+                 min(self.replicas[i].executor.busy_until), i)
+                for i in healthy]
         return min(load)[2]
 
     # ------------------------------------------------------------------

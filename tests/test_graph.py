@@ -60,7 +60,8 @@ def test_graph_registers_stages_and_models(models):
     assert graph.registry.entry("cloud.detect").metadata["batchable"]
     assert graph.registry.entry("fog.encode_low").kind == "preprocess"
     assert graph.registry.list(kind="inference") == [
-        "cloud.detect", "cloud.detect_split", "fog.classify_batched",
+        "cloud.detect", "cloud.detect_split", "cloud.detect_split_donated",
+        "cloud.detect_split_dynamic", "fog.classify_batched",
         "fog.classify_ensemble", "fog.classify_ensemble_batched",
         "fog.classify_regions"]
     # the fused cloud stage and the compacted fog stage are both batchable

@@ -199,6 +199,26 @@ def test_region_filter_kernel(n, m):
     assert bool(jnp.all(want == got))
 
 
+@pytest.mark.parametrize("f,n,m", [(1, 64, 64), (3, 64, 32), (4, 130, 70)])
+def test_region_filter_kernel_batch(f, n, m):
+    # the whole-flush (F, N) grid filter fused into detect_split dispatch
+    # must match the vmapped per-frame reference bit-for-bit
+    ka, kb = jax.random.split(KEY)
+    a = jnp.stack([_rand_boxes(jax.random.fold_in(ka, i), n)
+                   for i in range(f)])
+    b = jnp.stack([_rand_boxes(jax.random.fold_in(kb, i), m)
+                   for i in range(f)])
+    pv = jax.random.uniform(ka, (f, n)) > 0.2
+    av = jax.random.uniform(kb, (f, m)) > 0.2
+    loc = jax.random.uniform(kb, (f, n))
+    kw = dict(theta_loc=0.4, theta_iou=0.3, theta_back=0.5)
+    want = ops.region_filter_mask_batch(a, pv, b, av, loc, impl="ref", **kw)
+    got = ik.region_filter_mask_batch(a, pv, b, av, loc, bn=64, bm=64,
+                                      interpret=True, **kw)
+    assert got.shape == (f, n)
+    assert bool(jnp.all(want == got))
+
+
 def test_nms_removes_duplicates():
     boxes = jnp.asarray([[0.1, 0.1, 0.4, 0.4],
                          [0.11, 0.11, 0.41, 0.41],   # duplicate of 0
