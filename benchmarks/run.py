@@ -35,6 +35,8 @@ BENCHES = [
     ("steady_state", "benchmarks.bench_steady_state"),
     # also emits machine-readable artifacts/BENCH_shard.json
     ("shard_scale", "benchmarks.bench_shard_scale"),
+    # also emits machine-readable artifacts/BENCH_tenancy.json
+    ("tenancy", "benchmarks.bench_tenancy"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline_table"),
 ]

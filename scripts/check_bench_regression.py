@@ -43,6 +43,17 @@ Gated metrics:
     a growing ratio is the O(Q) scan creeping back regardless of machine.
   * ``store_bytes_peak``            — claim-check artifact-store peak
     physical bytes, lower is better; workload-matched.
+  * ``cost_per_mframes``            — multi-tenant fleet $ per million
+    frames under cost-aware scaling, lower is better; workload-matched
+    (the bill scales with tenant mix and demand).
+  * ``slo_attainment``              — worst per-tenant SLO attainment
+    under cost-aware scaling, higher is better; workload-matched.
+  * ``cost_beats_max``              — hard gate: cost-aware scaling must
+    bill less than always-max provisioning at equal-or-better attainment.
+  * ``isolation_ok``                — hard gate: a flooding tenant must
+    not push another tenant's p99 past its class's isolation factor.
+  * ``tenant_bit_identical``        — hard gate: the single-tenant default
+    configuration must stay bitwise-identical to the plain scheduler.
 
 Usage:
   python scripts/check_bench_regression.py \
@@ -120,6 +131,8 @@ def compare(baseline: Dict, fresh: Dict, tolerance: float
     gate("bundle_bytes_peak", higher_better=False, workload_bound=True)
     gate("overhead_ratio", higher_better=False, workload_bound=True)
     gate("store_bytes_peak", higher_better=False, workload_bound=True)
+    gate("cost_per_mframes", higher_better=False, workload_bound=True)
+    gate("slo_attainment", higher_better=True, workload_bound=True)
     if "bit_identical" in fresh and not fresh["bit_identical"]:
         bad.append("REGRESSION bit_identical: fused path no longer matches "
                    "the sync baseline")
@@ -130,6 +143,17 @@ def compare(baseline: Dict, fresh: Dict, tolerance: float
         bad.append("REGRESSION overhead_flat: per-stream scheduling "
                    "overhead grew with the stream count (sharded scheduler "
                    "no longer bounds the per-flush scan)")
+    if "cost_beats_max" in fresh and not fresh["cost_beats_max"]:
+        bad.append("REGRESSION cost_beats_max: cost-aware autoscaling no "
+                   "longer bills less than always-max provisioning at equal "
+                   "SLO attainment")
+    if "isolation_ok" in fresh and not fresh["isolation_ok"]:
+        bad.append("REGRESSION isolation_ok: a noisy tenant degraded "
+                   "another tenant's p99 beyond its SLO class's isolation "
+                   "factor (WFQ isolation broken)")
+    if "tenant_bit_identical" in fresh and not fresh["tenant_bit_identical"]:
+        bad.append("REGRESSION tenant_bit_identical: the single-tenant "
+                   "default path diverged from the plain scheduler")
     return ok, bad
 
 
@@ -202,9 +226,35 @@ def self_test(tolerance: float) -> int:
          dict(shard_base, overhead_flat=False,
               workload={"streams": [16, 64], "rounds": 2}), True),
     ]
+    tenancy_base = {"cost_per_mframes": 1200.0, "slo_attainment": 1.0,
+                    "cost_beats_max": True, "isolation_ok": True,
+                    "tenant_bit_identical": True,
+                    "workload": {"rounds": 6, "streams_per_tenant": 2,
+                                 "noisy_factor": 6}}
+    tenancy_cases = [
+        ("tenancy identical", dict(tenancy_base), False),
+        ("bill crept up", dict(tenancy_base, cost_per_mframes=1600.0), True),
+        ("attainment dropped",
+         dict(tenancy_base, slo_attainment=0.7), True),
+        ("cost-aware lost to always-max",
+         dict(tenancy_base, cost_beats_max=False), True),
+        ("noisy neighbor broke isolation",
+         dict(tenancy_base, isolation_ok=False), True),
+        ("tenancy broke bitwise identity",
+         dict(tenancy_base, tenant_bit_identical=False), True),
+        ("quick tenancy workload, pricier bill only",
+         dict(tenancy_base, cost_per_mframes=1600.0,
+              workload={"rounds": 2, "streams_per_tenant": 1,
+                        "noisy_factor": 3}), False),
+        ("quick tenancy workload, broken isolation",
+         dict(tenancy_base, isolation_ok=False,
+              workload={"rounds": 2, "streams_per_tenant": 1,
+                        "noisy_factor": 3}), True),
+    ]
     failures = 0
     for ref, suite in ((base, cases), (steady_base, steady_cases),
-                       (shard_base, shard_cases)):
+                       (shard_base, shard_cases),
+                       (tenancy_base, tenancy_cases)):
         for name, fresh, want_fail in suite:
             _, bad = compare(ref, fresh, tolerance)
             got_fail = bool(bad)

@@ -1,6 +1,9 @@
 from repro.serving.registry import FunctionRegistry, ModelZoo  # noqa: F401
 from repro.serving.batching import DynamicBatcher  # noqa: F401
 from repro.serving.executor import Executor  # noqa: F401
-from repro.serving.autoscaler import Autoscaler  # noqa: F401
+from repro.serving.autoscaler import Autoscaler, CostAwareAutoscaler  # noqa: F401
 from repro.serving.monitor import Monitor  # noqa: F401
 from repro.serving.fault import FaultTolerantCoordinator  # noqa: F401
+from repro.serving.tenancy import (BillingRates, CostModel,  # noqa: F401
+                                   SLOClass, Tenancy, TenantPipeline,
+                                   TenantSpec)

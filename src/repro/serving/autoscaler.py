@@ -8,8 +8,9 @@ cloud ML server's autoscaled replica pool that batches are sharded
 across).  ``unit`` only labels the trace for monitoring."""
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 
 @dataclass
@@ -56,3 +57,63 @@ class Autoscaler:
             "scale_downs": sum(h["new_devices"] < h["devices"]
                                for h in self.history),
         }
+
+
+@dataclass
+class CostAwareAutoscaler(Autoscaler):
+    """Scale the replica pool to minimise $ subject to SLO attainment.
+
+    Replaces the queue-depth heuristic with an explicit economic objective:
+
+    * **Upward** pressure is SLO-driven.  The pool needed to drain the
+      (EWMA-smoothed) backlog within the per-chunk SLO slack is
+      ``ceil(demand * frame_service_s / (slo_slack_s - cold_start_s))`` —
+      the cold-start term discounts the slack because a replica spun up
+      *now* contributes nothing for ``cold_start_s`` simulated seconds
+      (``Router(cold_start_s=)``).  When that exceeds the current pool we
+      scale up immediately: an SLO miss is priced at ``miss_value_usd``
+      per chunk, which dominates keep-alive for any sane price book.
+    * **Downward** pressure is keep-alive cost.  Retiring one replica
+      saves ``replica_rate_usd_s`` $/s, but if demand returns we pay the
+      cold-start latency (valued at ``miss_value_usd``).  The break-even
+      idle horizon is ``miss_value_usd / replica_rate_usd_s`` seconds —
+      we shed a replica only after demand has stayed below the smaller
+      pool's capacity for that long, one replica at a time.
+
+    History rows keep the base-class keys so ``summary()`` and the
+    schedulers' ``peak_devices``/``peak_queue`` reporting work unchanged.
+    """
+    replica_rate_usd_s: float = 0.004   # keep-alive $ per replica-second
+    frame_service_s: float = 1.0 / 75.0  # service time per queued frame
+    slo_slack_s: float = 1.0            # per-chunk latency budget to drain
+    cold_start_s: float = 0.0           # mirror of Router(cold_start_s=)
+    miss_value_usd: float = 0.004       # $ value assigned to one SLO miss
+    ewma_alpha: float = 0.4
+
+    _ewma_queue: float = 0.0
+    _low_since: Optional[float] = None
+
+    def decide(self, now: float, queue_len: int, devices: int) -> int:
+        self._ewma_queue += self.ewma_alpha * (queue_len - self._ewma_queue)
+        demand = max(float(queue_len), self._ewma_queue)
+        headroom = max(self.slo_slack_s - self.cold_start_s, 1e-6)
+        needed = math.ceil(demand * self.frame_service_s / headroom)
+        needed = min(self.max_devices, max(self.min_devices, needed))
+        new = devices
+        if needed > devices:
+            new = needed
+            self._low_since = None
+        elif needed < devices:
+            grace = self.miss_value_usd / max(self.replica_rate_usd_s, 1e-9)
+            if self._low_since is None:
+                self._low_since = now
+            if now - self._low_since >= grace and devices > self.min_devices:
+                new = devices - 1
+                self._low_since = now
+        else:
+            self._low_since = None
+        self.history.append({"t": now, "queue": queue_len,
+                             "devices": devices, "new_devices": new,
+                             "needed": needed,
+                             "ewma_queue": self._ewma_queue})
+        return new

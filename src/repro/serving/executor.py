@@ -34,6 +34,10 @@ class Executor:
 
     clock: float = 0.0
     busy_until: List[float] = None
+    # background-lane horizon: HITL/maintenance work queues here and never
+    # blocks the serving lane (fixes the fog head-of-line hazard where a
+    # busy node's own high-priority chunk sat behind collect work)
+    bg_busy_until: float = 0.0
     records: List[ExecutionRecord] = field(default_factory=list)
 
     def __post_init__(self):
@@ -55,10 +59,31 @@ class Executor:
 
     # -- execution ----------------------------------------------------------
     def run(self, fn_name: str, *args, now: Optional[float] = None,
-            model_time: Optional[float] = None, **kw) -> Tuple[Any, float]:
-        """Execute; returns (result, completion_time)."""
+            model_time: Optional[float] = None, priority: str = "serve",
+            **kw) -> Tuple[Any, float]:
+        """Execute; returns (result, completion_time).
+
+        ``priority="serve"`` (default) occupies a pool device.
+        ``priority="background"`` runs on the deferrable lane: it starts no
+        earlier than the pool's next free instant but reserves *no* device
+        time — later serve-lane calls are never queued behind it (WFQ/
+        priority ordering on a shared fog node; the PR-2 follow-up).
+        """
         now = self.clock if now is None else now
         fn = self.registry.get(fn_name)
+        if priority == "background":
+            start = max(now, min(self.busy_until), self.bg_busy_until)
+            t0 = time.perf_counter()
+            result = fn(*args, **kw)
+            wall = time.perf_counter() - t0
+            dur = wall if self.measure else (
+                model_time if model_time is not None else wall)
+            done = start + dur
+            self.bg_busy_until = done
+            self.clock = max(self.clock, done)
+            self.records.append(ExecutionRecord(fn_name, start, dur,
+                                                f"{self.name}/bg"))
+            return result, done
         dev, start = self._acquire(now)
         t0 = time.perf_counter()
         result = fn(*args, **kw)

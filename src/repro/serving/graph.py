@@ -82,6 +82,7 @@ from repro.serving.ingest import ArtifactStore, ClaimCheck, content_key
 from repro.serving.monitor import Monitor
 from repro.serving.registry import Dispatcher, FunctionRegistry, ModelZoo
 from repro.serving.router import Router
+from repro.serving.tenancy import TenantChunkResult
 
 STAGE_ENCODE = "fog.encode_low"
 STAGE_DETECT = "cloud.detect"
@@ -243,6 +244,11 @@ class StreamState:
     annotator: Any = None
     slo: Optional[float] = None
     weight: float = 1.0
+    # owning TenantSpec (tenancy.py); None = the implicit default tenant
+    # running the High-Low pipeline — the exact pre-tenancy code paths.
+    # A tenant with a custom pipeline routes this stream's flushes through
+    # ``_dispatch_tenant`` instead of the detect/classify hot path.
+    tenant: Any = None
     clock: float = 0.0
     busy: bool = False
     # adaptive SLO headroom: EWMA of observed deadline attainment drives the
@@ -460,7 +466,10 @@ class GraphScheduler:
                  router: Optional[Router] = None,
                  seq_counter=None,
                  store: Optional[ArtifactStore] = None,
-                 pick_policy: str = "least"):
+                 pick_policy: str = "least",
+                 cost_model=None,
+                 fog_queueing: bool = False,
+                 hitl_cost_s: float = 0.0):
         assert hot_path in ("fused", "sync")
         proto = graph.protocol
         self.graph = graph
@@ -593,11 +602,29 @@ class GraphScheduler:
         # regression ledger — a HITL-off run must show zero fog_features /
         # fog_scores downloads here
         self.field_downloads: Dict[str, int] = {}
+        # --- tenancy (tenancy.py) ------------------------------------------
+        # cost_model: per-tenant monetary metering.  Pure accounting — it
+        # never moves an event time, so attaching one leaves the schedule
+        # bitwise-identical.  fog_queueing (opt-in) folds a stream's real
+        # fog-executor queueing delay into its reported latency instead of
+        # the pre-tenancy instantaneous-accounting convention.  hitl_cost_s
+        # prices HITL collect work on the fog node's *background* lane
+        # (Executor priority="background"), where it can never head-of-line
+        # block the stream's own serving work.
+        self.cost_model = cost_model
+        if cost_model is not None:
+            self.router.cost_model = cost_model
+            cost_model.observe_pool(0.0, self.router.healthy_count())
+        self.fog_queueing = fog_queueing
+        self.hitl_cost_s = hitl_cost_s
+        # custom-pipeline dispatch ledger, kept apart from hot_path_stats so
+        # tenant flushes never skew host-syncs-per-flush style ratios
+        self.tenant_stats = {"flushes": 0, "chunks": 0, "frames": 0}
 
     # ------------------------------------------------------------------
     def add_stream(self, name: str, *, W, learner=None, annotator=None,
                    slo: Optional[float] = None,
-                   weight: float = 1.0) -> StreamState:
+                   weight: float = 1.0, tenant=None) -> StreamState:
         fog_exec = Executor(f"fog-{name}", self.graph.registry,
                             self.graph.protocol.fog)
         lo, hi = self.margin_bounds
@@ -606,10 +633,15 @@ class GraphScheduler:
         st = StreamState(name=name, W=np.asarray(W), fog_exec=fog_exec,
                          learner=learner,
                          annotator=annotator or OracleAnnotator(),
-                         slo=slo, weight=weight,
+                         slo=slo, weight=weight, tenant=tenant,
                          slo_margin=self.slo_margin, att_ewma=att0)
         self.streams[name] = st
+        if self.cost_model is not None and tenant is not None:
+            self.cost_model.register(tenant)
         return st
+
+    def _tenant_name(self, stream: StreamState) -> str:
+        return stream.tenant.name if stream.tenant is not None else "default"
 
     def submit(self, stream: StreamState, chunk, *, learn: bool = True
                ) -> None:
@@ -784,6 +816,26 @@ class GraphScheduler:
         simulated clock (the cloud ML server's load-balanced replica pool)."""
         if not reqs:
             return
+        if any(r.stream.tenant is not None
+               and r.stream.tenant.pipeline is not None for r in reqs):
+            # multi-tenant flush: the batcher already decided cross-tenant
+            # WFQ order, so partitioning by pipeline here preserves each
+            # tenant's fair share; custom pipelines dispatch through their
+            # own cloud/fog stages on the SAME replica pool + fog executors
+            default_reqs: List[DetectRequest] = []
+            by_pipe: Dict[str, Tuple[Any, List[DetectRequest]]] = {}
+            for r in reqs:
+                pipe = (r.stream.tenant.pipeline
+                        if r.stream.tenant is not None else None)
+                if pipe is None:
+                    default_reqs.append(r)
+                else:
+                    by_pipe.setdefault(pipe.name, (pipe, []))[1].append(r)
+            for pipe, group in by_pipe.values():
+                self._dispatch_tenant(t, group, pipe)
+            reqs = default_reqs
+            if not reqs:
+                return
         k = min(self.router.healthy_count(), len(reqs))
         if k <= 1:
             groups = [reqs]
@@ -874,6 +926,8 @@ class GraphScheduler:
             self.store.sweep(t)
         # real queue depth (frames still waiting / in flight to the cloud)
         queue_depth = self.batcher.pending_frames
+        if self.cost_model is not None:
+            self.cost_model.observe_pool(t, self.router.healthy_count())
         self.hot_path_stats["flushes"] += 1
         if fused:
             self._dispatch_fused(t, reqs, slices, pad, batch, svc, idx,
@@ -937,21 +991,33 @@ class GraphScheduler:
             self.hot_path_stats["crops_budget"] += split.prop_valid.size
             if stream.ensemble is not None:
                 snaps_dev, omega_dev = stream.ensemble_device()
-                merged, _ = stream.fog_exec.run(
+                merged, done_c = stream.fog_exec.run(
                     STAGE_CLASSIFY_ENS, jnp.asarray(chunk.frames), split,
                     snaps_dev, omega_dev, now=done + wan_down,
                     model_time=clf_time)
             else:
-                merged, _ = stream.fog_exec.run(
+                merged, done_c = stream.fog_exec.run(
                     STAGE_CLASSIFY, jnp.asarray(chunk.frames), split,
                     jnp.asarray(stream.W), now=done + wan_down,
                     model_time=clf_time)
+            # fog_queueing: the wait for the stream's fog device (busy with
+            # an earlier chunk) joins the reported latency; default keeps
+            # the pre-tenancy instantaneous-accounting convention
+            fog_wait = (max(0.0, done_c - clf_time - (done + wan_down))
+                        if self.fog_queueing else 0.0)
+            if self.cost_model is not None:
+                f = req.frames.shape[0]
+                tname = self._tenant_name(stream)
+                self.cost_model.charge_cloud(
+                    tname, frames=f, invocations=f,
+                    busy_s=svc * f / max(n_frames - pad, 1), t=t)
+                self.cost_model.charge_fog(tname, clf_time, t)
             lat = LatencyBreakdown(
                 quality_control=req.meta["qc"],
                 transmission=req.meta["wan_up"] + wan_down,
                 cloud_inference=svc,
                 fog_inference=clf_time,
-                queue_wait=max(0.0, start - req.arrival))
+                queue_wait=max(0.0, start - req.arrival) + fog_wait)
             res = protocol_mod.assemble_result(
                 split, merged, wan_bytes=req.meta["wan_bytes"],
                 coord_bytes=float(coord_bytes),
@@ -1102,14 +1168,24 @@ class GraphScheduler:
             chunk = req.meta["chunk"]
             # the stream's share of the batched classify: pure accounting
             # on its own fog node's clock (the compute already ran batched)
-            stream.fog_exec.run(STAGE_CLASSIFY_VIEW, sl,
-                                now=done + wan_down, model_time=clf_time)
+            _, done_c = stream.fog_exec.run(STAGE_CLASSIFY_VIEW, sl,
+                                            now=done + wan_down,
+                                            model_time=clf_time)
+            fog_wait = (max(0.0, done_c - clf_time - (done + wan_down))
+                        if self.fog_queueing else 0.0)
+            if self.cost_model is not None:
+                f = req.frames.shape[0]
+                tname = self._tenant_name(stream)
+                self.cost_model.charge_cloud(
+                    tname, frames=f, invocations=f,
+                    busy_s=svc * f / max(f_real, 1), t=t)
+                self.cost_model.charge_fog(tname, clf_time, t)
             lat = LatencyBreakdown(
                 quality_control=req.meta["qc"],
                 transmission=req.meta["wan_up"] + wan_down,
                 cloud_inference=svc,
                 fog_inference=clf_time,
-                queue_wait=max(0.0, start - req.arrival))
+                queue_wait=max(0.0, start - req.arrival) + fog_wait)
             res = LazyChunkResult(
                 bundle, sl, wan_bytes=req.meta["wan_bytes"],
                 coord_bytes=coord_bytes,
@@ -1121,6 +1197,84 @@ class GraphScheduler:
                        dict(stream=stream, chunk=chunk, res=res,
                             inflight=True, mode="cloud",
                             learn=req.meta["learn"], t0=req.meta["t0"]))
+
+    def _dispatch_tenant(self, t: float, reqs: List[DetectRequest],
+                         pipe) -> None:
+        """Dispatch one tenant pipeline's share of a flush: a batched cloud
+        stage through the shared replica pool, then each chunk's fog merge
+        stage on its stream's own fog executor.
+
+        Mirrors ``_dispatch``'s claim-check discipline (resolve at assembly,
+        release at commit) and detect-window accounting, but keeps its
+        counters in ``tenant_stats`` so the High-Low hot-path ratios stay
+        clean.  Custom pipelines do not participate in the fault-schedule
+        fallback (that path re-encodes for the fog *detector*, which a
+        non-detection graph doesn't have)."""
+        m0 = time.perf_counter()
+        idx = self.router.pick()
+        if idx is None:
+            raise RuntimeError(
+                f"no healthy replicas for tenant pipeline {pipe.name!r}")
+        if self.store is not None:
+            payloads = [self.store.get(r.frames) for r in reqs]
+        else:
+            payloads = [r.frames for r in reqs]
+        batch, slices, pad = pack_frames_device(
+            payloads, buckets=self.batcher.pad_buckets)
+        if self.store is not None:
+            for r in reqs:
+                self.store.release(r.frames, now=t)
+            self.store.sweep(t)
+        n_frames = batch.shape[0]
+        f_real = n_frames - pad
+        svc = n_frames / pipe.cloud_fps
+        queue_depth = self.batcher.pending_frames
+        if self.cost_model is not None:
+            self.cost_model.observe_pool(t, self.router.healthy_count())
+        out, done, _ = self.router.route(
+            pipe.cloud_stage, batch, now=t, model_time=svc,
+            queue_depth=queue_depth, replica=idx)
+        start = done - svc
+        self._detect_windows.append((start, svc))
+        self.tenant_stats["flushes"] += 1
+        self.tenant_stats["chunks"] += len(reqs)
+        self.tenant_stats["frames"] += f_real
+
+        for req, sl in zip(reqs, slices):
+            stream = req.stream
+            chunk = req.meta["chunk"]
+            f = req.frames.shape[0]
+            out_sl = out[sl]
+            coord_bytes = float(getattr(out_sl, "nbytes", 8 * f))
+            wan_down = self.network.wan_time(coord_bytes)
+            fog_time = f / pipe.fog_fps
+            result, done_c = stream.fog_exec.run(
+                pipe.fog_stage, chunk.frames, out_sl,
+                now=done + wan_down, model_time=fog_time)
+            fog_wait = (max(0.0, done_c - fog_time - (done + wan_down))
+                        if self.fog_queueing else 0.0)
+            lat = LatencyBreakdown(
+                quality_control=req.meta["qc"],
+                transmission=req.meta["wan_up"] + wan_down,
+                cloud_inference=svc,
+                fog_inference=fog_time,
+                queue_wait=max(0.0, start - req.arrival) + fog_wait)
+            billed = pipe.billed(result, f)
+            if self.cost_model is not None:
+                tname = self._tenant_name(stream)
+                self.cost_model.charge_cloud(
+                    tname, frames=f, invocations=billed,
+                    busy_s=svc * f / max(f_real, 1), t=t)
+                self.cost_model.charge_fog(tname, fog_time, t)
+            res = TenantChunkResult(
+                result, wan_bytes=req.meta["wan_bytes"],
+                coord_bytes=coord_bytes + pipe.out_bytes(result, f),
+                cloud_frames=billed, latency=lat)
+            self._push(req.meta["t0"] + lat.total, "finalize",
+                       dict(stream=stream, chunk=chunk, res=res,
+                            mode="cloud", learn=req.meta["learn"],
+                            t0=req.meta["t0"]))
+        self.sched_stats["model_wall_s"] += time.perf_counter() - m0
 
     def _finalize(self, t: float, data: dict) -> None:
         stream, chunk = data["stream"], data["chunk"]
@@ -1140,9 +1294,23 @@ class GraphScheduler:
         self.monitor.record("latency", res.latency.total, t0)
         self.monitor.record("wan_bytes", res.wan_bytes, t0)
         self.monitor.incr("cloud_frames", res.cloud_frames)
+        tenant_tagged = stream.tenant is not None or self.cost_model is not None
+        if tenant_tagged:
+            # per-tenant attribution: tagged latency/attainment series feed
+            # throughput_report()["tenants"] and the noisy-neighbor gate
+            tname = self._tenant_name(stream)
+            self.monitor.record(f"latency:{tname}", res.latency.total, t0)
+        if self.cost_model is not None:
+            tname = self._tenant_name(stream)
+            self.cost_model.charge_egress(
+                tname, res.wan_bytes + res.coord_bytes, t0)
+            self.cost_model.note_chunk(tname)
         if stream.slo is not None:
             met = res.latency.total <= stream.slo + 1e-9
             self.monitor.record("slo_attained", 1.0 if met else 0.0, t0)
+            if tenant_tagged:
+                self.monitor.record(f"slo_attained:{self._tenant_name(stream)}",
+                                    1.0 if met else 0.0, t0)
             self.monitor.record("slo_margin",
                                 stream.slo - res.latency.total, t0)
             if self.adaptive_margin:
@@ -1155,8 +1323,17 @@ class GraphScheduler:
                 and stream.learner is not None
                 and data["mode"] == "cloud"
                 and not stream.learner.budget_exhausted):
-            updated, _ = stream.fog_exec.run(STAGE_COLLECT, stream, chunk,
-                                             res, now=t, model_time=0.0)
+            # HITL feedback runs on the fog node's BACKGROUND lane: the
+            # stream's next chunk is never head-of-line blocked behind
+            # collect work (the PR-2 follow-up), and a nonzero hitl_cost_s
+            # prices the labeling/update time into the tenant's fog spend
+            # without touching any serving-path completion time
+            updated, done_c = stream.fog_exec.run(
+                STAGE_COLLECT, stream, chunk, res, now=t,
+                model_time=self.hitl_cost_s, priority="background")
+            if self.cost_model is not None and self.hitl_cost_s > 0:
+                self.cost_model.charge_fog(self._tenant_name(stream),
+                                           self.hitl_cost_s, done_c)
             if updated:
                 self.monitor.incr("model_updates")
         stream.clock = t
@@ -1330,6 +1507,16 @@ class GraphScheduler:
                 / ss["finalizes"])
         if self.store is not None:
             d["store"] = self.store.report()
+            # capacity-pressure evictions, surfaced at top level so the
+            # regression gate (and the CostModel's spill charge) see them
+            d["store_spills"] = self.store.stats["spills"]
+        if self.tenant_stats["flushes"]:
+            d.update({f"tenant_{k}": v for k, v in self.tenant_stats.items()})
+        if self.cost_model is not None:
+            store_stats = (self.store.report() if self.store is not None
+                           else None)
+            d["cost"] = self.cost_model.cost_report(store_stats)
+            d["tenants"] = self._tenant_report()
         # per-field lazy-result ledger: which result fields were actually
         # downloaded (a HITL-off run must never pay for fog_features)
         d["field_downloads"] = dict(self.field_downloads)
@@ -1361,3 +1548,20 @@ class GraphScheduler:
             d["peak_devices"] = s["peak_devices"]
             d["peak_queue"] = s["peak_queue"]
         return d
+
+    def _tenant_report(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant latency percentiles + SLO attainment, enumerated from
+        the monitor's tagged series (sharded-safe: shards share the
+        monitor, so every shard reports the same complete view)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for tag in self.monitor.tags("latency"):
+            att = self.monitor.values(f"slo_attained:{tag}")
+            out[tag] = {
+                "chunks": len(self.monitor.values(f"latency:{tag}")),
+                "p50_latency_s": self.monitor.percentile(f"latency:{tag}",
+                                                         50),
+                "p99_latency_s": self.monitor.percentile(f"latency:{tag}",
+                                                         99),
+                "slo_attainment": float(np.mean(att)) if att else 1.0,
+            }
+        return out

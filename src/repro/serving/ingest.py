@@ -90,6 +90,13 @@ class ArtifactStore:
     """Simulated content-addressed artifact store with ref-count+TTL GC."""
 
     ttl: float = 30.0
+    # physical-footprint bound; None = unbounded (the pre-PR-8 behaviour).
+    # Publishing over capacity force-evicts idle payloads before their TTL
+    # — each such early eviction is a *spill*: the payload must be re-fetched
+    # from cold storage if re-published, so the CostModel charges
+    # ``spill_bytes`` at the spill rate.  Referenced payloads are never
+    # evicted; a fully-referenced over-capacity store tolerates the overflow.
+    capacity_bytes: Optional[float] = None
 
     _entries: Dict[str, _Entry] = field(default_factory=dict)
     # (expire_t, key, idle_stamp) records; lazily validated on sweep
@@ -101,6 +108,8 @@ class ArtifactStore:
         "gets": 0,            # payload resolutions (flush assembly)
         "releases": 0,
         "evictions": 0,
+        "spills": 0,          # capacity-pressure evictions (pre-TTL)
+        "spill_bytes": 0.0,
         "bytes_current": 0.0,         # physical: unique payload bytes
         "bytes_peak": 0.0,
         "logical_bytes_current": 0.0,  # what the event heap would hold
@@ -141,8 +150,25 @@ class ArtifactStore:
         self.stats["logical_bytes_peak"] = max(
             self.stats["logical_bytes_peak"],
             self.stats["logical_bytes_current"])
+        if self.capacity_bytes is not None:
+            self._enforce_capacity()
         return ClaimCheck(key=key, shape=shape, dtype=dtype,
                           nbytes=int(nbytes))
+
+    def _enforce_capacity(self) -> None:
+        """Spill idle payloads (oldest pending expiry first) until the
+        physical footprint fits ``capacity_bytes``."""
+        while (self.stats["bytes_current"] > self.capacity_bytes
+               and self._expiry):
+            _, key, stamp = self._expiry.popleft()
+            ent = self._entries.get(key)
+            if ent is None or ent.refs != 0 or ent.idle_stamp != stamp:
+                continue  # stale record — the payload was re-acquired
+            del self._entries[key]
+            self.stats["evictions"] += 1
+            self.stats["spills"] += 1
+            self.stats["spill_bytes"] += ent.nbytes
+            self.stats["bytes_current"] -= ent.nbytes
 
     # -- resolve ---------------------------------------------------------
     def get(self, ref: ClaimCheck) -> Any:

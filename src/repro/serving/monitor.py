@@ -31,6 +31,13 @@ class Monitor:
     def values(self, name: str) -> List[float]:
         return [v for _, v in self.series[name]]
 
+    def tags(self, prefix: str) -> List[str]:
+        """Tag suffixes of series named ``{prefix}:{tag}`` (e.g. per-tenant
+        ``latency:gold-vision`` series) — sorted, without the prefix."""
+        p = prefix + ":"
+        return sorted(n[len(p):] for n in self.series
+                      if n.startswith(p) and self.series[n])
+
     def percentile(self, name: str, p: float) -> float:
         vals = sorted(self.values(name))
         if not vals:

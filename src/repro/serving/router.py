@@ -61,6 +61,10 @@ class Router:
         # serves its first request no earlier than t + cold_start_s (its
         # devices start busy, not free-at-t=0)
         self.cold_start_s = cold_start_s
+        # optional tenancy CostModel: when set, every pool-size change is
+        # observed as a (t, healthy) point so provisioned replica-seconds
+        # (keep-alive spend) can be integrated at report time
+        self.cost_model = None
         self._queue: List[Tuple[str, tuple, dict, float]] = []
         self.clock = 0.0
 
@@ -131,6 +135,8 @@ class Router:
                 break
             self.replicas.pop(idx)
             self.monitor.incr("replicas_removed")
+        if self.cost_model is not None:
+            self.cost_model.observe_pool(now, self.healthy_count())
 
     # ------------------------------------------------------------------
     def route(self, fn_name: str, *args, now: Optional[float] = None,

@@ -60,9 +60,12 @@ __all__ = ["ShardedScheduler"]
 _MAX_KEYS = frozenset((
     "batch_max_batch_chunks", "fog_batch_occupancy", "replicas",
     "healthy_replicas", "peak_devices", "peak_queue"))
-# keys identical on every shard (shared objects / config)
+# keys identical on every shard (shared objects / config): the store,
+# cost model, and monitor are shared, so their rollups ("store_spills",
+# "cost", "tenants") must not be summed K times
 _FIRST_KEYS = frozenset(("hot_path", "replicas", "healthy_replicas",
-                         "peak_devices", "peak_queue"))
+                         "peak_devices", "peak_queue", "store_spills",
+                         "cost", "tenants"))
 
 
 class ShardedScheduler:

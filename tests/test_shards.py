@@ -84,7 +84,8 @@ def _assert_reports_match(rep_a, rep_b, peaks=True):
         # flush re-pushes scan only the shard's own queue — the O(Q)
         # work sharding exists to remove).  sched_finalizes stays exact.
         skip += ["peak", "occupancy", "sched_events"]
-    extra = {"shards", "steals", "store", "batch_stolen", "batch_adopted"}
+    extra = {"shards", "steals", "store", "store_spills", "batch_stolen",
+             "batch_adopted"}
     keys = (set(rep_a) | set(rep_b)) - extra
     for k in keys:
         if any(s in k for s in skip):
