@@ -1,28 +1,68 @@
-"""Paper Fig. 15: cloud outage -> fog fallback -> recovery timeline."""
+"""Paper Fig. 15: cloud outage -> fog fallback -> recovery timeline.
+
+The WAN drops mid-run; missed heartbeats trip the failover after
+``failure_threshold`` polls, chunks run on the fog fallback detector
+until the link returns, and the coordinator recovers to cloud mode.
+The timeline is workload-deterministic — the mode sequence depends only
+on the outage window and the heartbeat parameters, never on model
+weights or machine speed — so CI gates it exactly:
+
+  * ``fault_zero_loss``   — every chunk yields a result in every mode
+    (hard gate: the outage may degrade quality, never drop frames);
+  * ``fault_recovered``   — the run ends back in cloud mode (hard gate);
+  * ``fallback_chunks`` / ``fallback_frames`` — exactly how much work the
+    fog fallback absorbed (exact workload-bound gate: a drifting count
+    means the heartbeat detector's timing changed).
+
+Written to ``BENCH_fault.json``; gated by
+``scripts/check_bench_regression.py``.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_fault_tolerance.py   # full, gated
+  PYTHONPATH=src python benchmarks/bench_fault_tolerance.py --quick
+  PYTHONPATH=src python -m benchmarks.run --only bench_fault_tolerance
+"""
 from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import numpy as np
 
-from repro.configs.vpaas_video import CLASSIFIER, DETECTOR
+from repro.configs.vpaas_video import (CLASSIFIER, DETECTOR,
+                                       ClassifierConfig, DetectorConfig)
 from repro.core.coordinator import CloudFogCoordinator
 from repro.core.protocol import HighLowProtocol
 from repro.video import synthetic
 from repro.video.metrics import F1Accumulator
 
-from benchmarks.common import BenchContext
+from benchmarks.common import write_json
+
+# standalone (main) runs use bench-size models: the gated quantities are
+# heartbeat timing, not accuracy, and the small detector doubles as its
+# own fog fallback
+BENCH_DET = DetectorConfig(name="bench-fault-det", image_hw=(32, 32),
+                           widths=(8, 16))
+BENCH_CLF = ClassifierConfig(name="bench-fault-clf", crop_hw=(16, 16),
+                             widths=(8, 16), feature_dim=16)
 
 
-def run(ctx: BenchContext, quick: bool = False):
+def bench(proto, det_params, clf_params, fallback_params, *, n: int,
+          frames: int = 4, hw=None, fallback_cfg=None, models: str = "full"):
     rng = np.random.default_rng(15)
-    n = 6 if quick else 10
-    chunks = [synthetic.make_chunk(rng, "traffic", num_frames=4)
+    kw = {"hw": hw} if hw is not None else {}
+    chunks = [synthetic.make_chunk(rng, "traffic", num_frames=frames, **kw)
               for _ in range(n)]
     outage = (n // 3, 2 * n // 3)
 
-    proto = HighLowProtocol(DETECTOR, CLASSIFIER)
-    coord = CloudFogCoordinator(proto, ctx.det_params, ctx.clf_params,
-                                fallback_params=ctx.fallback_params)
-    rows = []
+    coord = CloudFogCoordinator(proto, det_params, clf_params,
+                                fallback_params=fallback_params,
+                                fallback_cfg=fallback_cfg)
+    rows, modes, produced = [], [], 0
     for i, ch in enumerate(chunks):
         coord.network.up = not (outage[0] <= i < outage[1])
         res = coord.process_chunk(ch, learn=False)
@@ -31,10 +71,83 @@ def run(ctx: BenchContext, quick: bool = False):
             keep = res.valid[t]
             acc.update(res.boxes[t][keep], res.labels[t][keep],
                        ch.gt_boxes[t], ch.gt_labels[t])
+        produced += np.asarray(res.valid).shape[0] == frames
+        modes.append(coord.fault.mode)
         rows.append({"name": f"t{i}", "us_per_call": "",
                      "mode": coord.fault.mode,
                      "f1": f"{acc.f1:.3f}",
                      "latency_s": f"{res.latency.total:.3f}"})
     rows.append({"name": "events", "us_per_call": "",
                  "events": "|".join(e["event"] for e in coord.fault.events)})
+
+    fallback_chunks = sum(m == "fog-fallback" for m in modes)
+    payload = {
+        "workload": {"n": n, "outage": list(outage),
+                     "frames_per_chunk": frames,
+                     "heartbeat_interval": coord.fault.heartbeat_interval,
+                     "failure_threshold": coord.fault.failure_threshold,
+                     "models": models},
+        "modes": modes,
+        "events": [e["event"] for e in coord.fault.events],
+        "fault_zero_loss": produced == n,
+        "fault_recovered": modes[-1] == "cloud",
+        "fallback_chunks": fallback_chunks,
+        "fallback_frames": fallback_chunks * frames,
+    }
+    return rows, payload
+
+
+def run(ctx, quick: bool = False):
+    """benchmarks.run entry point — also emits artifacts/BENCH_fault.json."""
+    proto = HighLowProtocol(DETECTOR, CLASSIFIER)
+    rows, payload = bench(proto, ctx.det_params, ctx.clf_params,
+                          ctx.fallback_params, n=6 if quick else 10)
+    write_json(payload, os.path.join(os.path.dirname(__file__), "..",
+                                     "artifacts", "BENCH_fault.json"))
     return rows
+
+
+def main() -> None:
+    import jax
+    from repro.models import classifier as clf_mod
+    from repro.models import detector as det_mod
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter timeline (CI smoke)")
+    ap.add_argument("--json", default="BENCH_fault.json")
+    args = ap.parse_args()
+
+    det_params = det_mod.init_detector(BENCH_DET, jax.random.PRNGKey(0))
+    clf_params = clf_mod.init_classifier(BENCH_CLF, jax.random.PRNGKey(1))
+    fb_params = det_mod.init_detector(BENCH_DET, jax.random.PRNGKey(2))
+    proto = HighLowProtocol(BENCH_DET, BENCH_CLF)
+    rows, payload = bench(proto, det_params, clf_params, fb_params,
+                          n=6 if args.quick else 10, hw=(32, 32),
+                          fallback_cfg=BENCH_DET, models="bench")
+    for row in rows:
+        print(",".join(f"{k}={v}" for k, v in row.items()))
+    write_json(payload, args.json)
+    print(f"# fault timeline: {' '.join(payload['modes'])}")
+    print(f"# wrote {args.json}")
+
+    fails = []
+    if not payload["fault_zero_loss"]:
+        fails.append("a chunk produced no result during the outage — the "
+                     "fallback path dropped work")
+    if not payload["fault_recovered"]:
+        fails.append(f"run ended in {payload['modes'][-1]!r}, not cloud "
+                     "mode — recovery never fired")
+    if payload["fallback_chunks"] < 1:
+        fails.append("outage produced no fog-fallback chunks — heartbeat "
+                     "failover never tripped")
+    for f in fails:
+        print(f"# FAIL: {f}", file=sys.stderr)
+    if fails:
+        raise SystemExit(1)
+    print(f"# PASS: {payload['fallback_chunks']} chunks absorbed by the "
+          "fog fallback, zero loss, recovered")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ BENCHES = [
     ("fig10b_11_latency", "benchmarks.bench_latency"),
     ("fig12_content_types", "benchmarks.bench_content_types"),
     ("fig13_hitl", "benchmarks.bench_hitl"),
+    # also emits machine-readable artifacts/BENCH_fault.json
     ("fig15_fault_tolerance", "benchmarks.bench_fault_tolerance"),
     ("fig16_autoscale", "benchmarks.bench_autoscale"),
     ("multistream", "benchmarks.bench_multistream"),
@@ -37,6 +38,8 @@ BENCHES = [
     ("shard_scale", "benchmarks.bench_shard_scale"),
     # also emits machine-readable artifacts/BENCH_tenancy.json
     ("tenancy", "benchmarks.bench_tenancy"),
+    # also emits machine-readable artifacts/BENCH_chaos.json
+    ("chaos", "benchmarks.bench_chaos"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline_table"),
 ]

@@ -54,6 +54,23 @@ Gated metrics:
     not push another tenant's p99 past its class's isolation factor.
   * ``tenant_bit_identical``        — hard gate: the single-tenant default
     configuration must stay bitwise-identical to the plain scheduler.
+  * ``hedge_p99_ratio``             — chaos bench: hedged p99 over unhedged
+    p99 under the straggler wave, lower is better; workload-matched (the
+    ratio is defined by the straggler schedule and fleet shape).
+  * ``chaos_zero_loss``             — hard gate: no chunk may be lost under
+    any injected fault class.
+  * ``chaos_bit_identical``         — hard gate: an idle ``FaultInjector``
+    must leave results and the full throughput report bitwise-identical
+    to the plain scheduler.
+  * ``corruption_recovered_all``    — hard gate: every injected artifact
+    corruption must be detected by the store's content hash and repaired
+    by re-derivation, with results bitwise equal to the fault-free run.
+  * ``fallback_chunks`` / ``fallback_frames`` — Fig. 15 fog-fallback
+    absorption, gated EXACTLY when workloads match: the mode timeline is
+    deterministic, so any drift means heartbeat detection timing changed.
+  * ``fault_zero_loss`` / ``fault_recovered`` — hard gates: the WAN outage
+    may degrade quality but never drop chunks, and the run must end back
+    in cloud mode.
 
 Usage:
   python scripts/check_bench_regression.py \
@@ -122,6 +139,23 @@ def compare(baseline: Dict, fresh: Dict, tolerance: float
             (ok if f <= ceil else bad).append(
                 line if f <= ceil else f"REGRESSION {line}")
 
+    def exact_gate(metric: str) -> None:
+        """Workload-bound metric that must not move AT ALL: used for
+        deterministic counts (the Fig. 15 mode timeline) where any drift
+        is a behaviour change, not noise."""
+        if metric not in baseline or metric not in fresh:
+            ok.append(f"skip {metric}: absent from "
+                      f"{'baseline' if metric not in baseline else 'fresh'}")
+            return
+        if not matched:
+            ok.append(f"skip {metric}: fresh run uses a different workload "
+                      "(workload-bound metric)")
+            return
+        b, f = baseline[metric], fresh[metric]
+        line = f"{metric}: fresh {f} vs baseline {b} (exact)"
+        (ok if f == b else bad).append(
+            line if f == b else f"REGRESSION {line}")
+
     gate("speedup", higher_better=True, workload_bound=True)
     gate("host_syncs_per_flush_fused", higher_better=False,
          workload_bound=False)
@@ -133,6 +167,9 @@ def compare(baseline: Dict, fresh: Dict, tolerance: float
     gate("store_bytes_peak", higher_better=False, workload_bound=True)
     gate("cost_per_mframes", higher_better=False, workload_bound=True)
     gate("slo_attainment", higher_better=True, workload_bound=True)
+    gate("hedge_p99_ratio", higher_better=False, workload_bound=True)
+    exact_gate("fallback_chunks")
+    exact_gate("fallback_frames")
     if "bit_identical" in fresh and not fresh["bit_identical"]:
         bad.append("REGRESSION bit_identical: fused path no longer matches "
                    "the sync baseline")
@@ -154,6 +191,23 @@ def compare(baseline: Dict, fresh: Dict, tolerance: float
     if "tenant_bit_identical" in fresh and not fresh["tenant_bit_identical"]:
         bad.append("REGRESSION tenant_bit_identical: the single-tenant "
                    "default path diverged from the plain scheduler")
+    if "chaos_zero_loss" in fresh and not fresh["chaos_zero_loss"]:
+        bad.append("REGRESSION chaos_zero_loss: chunks were lost under "
+                   "fault injection (graceful degradation broken)")
+    if "chaos_bit_identical" in fresh and not fresh["chaos_bit_identical"]:
+        bad.append("REGRESSION chaos_bit_identical: an idle fault injector "
+                   "changed scheduler results or the throughput report")
+    if ("corruption_recovered_all" in fresh
+            and not fresh["corruption_recovered_all"]):
+        bad.append("REGRESSION corruption_recovered_all: an injected "
+                   "artifact corruption was served or lost instead of "
+                   "detected-and-re-derived")
+    if "fault_zero_loss" in fresh and not fresh["fault_zero_loss"]:
+        bad.append("REGRESSION fault_zero_loss: the WAN outage dropped "
+                   "chunks instead of absorbing them on the fog fallback")
+    if "fault_recovered" in fresh and not fresh["fault_recovered"]:
+        bad.append("REGRESSION fault_recovered: the coordinator never "
+                   "returned to cloud mode after the outage lifted")
     return ok, bad
 
 
@@ -251,10 +305,60 @@ def self_test(tolerance: float) -> int:
               workload={"rounds": 2, "streams_per_tenant": 1,
                         "noisy_factor": 3}), True),
     ]
+    chaos_base = {"hedge_p99_ratio": 0.45, "chaos_zero_loss": True,
+                  "chaos_bit_identical": True,
+                  "corruption_recovered_all": True,
+                  "workload": {"streams": 64, "chunks_per_stream": 5,
+                               "straggler_factor": 10.0}}
+    chaos_cases = [
+        ("chaos identical", dict(chaos_base), False),
+        ("hedge ratio crept up",
+         dict(chaos_base, hedge_p99_ratio=0.58), True),
+        ("chunk lost under fault", dict(chaos_base, chaos_zero_loss=False),
+         True),
+        ("idle injector diverged",
+         dict(chaos_base, chaos_bit_identical=False), True),
+        ("corruption served",
+         dict(chaos_base, corruption_recovered_all=False), True),
+        ("quick chaos workload, bad ratio only",
+         dict(chaos_base, hedge_p99_ratio=0.9,
+              workload={"streams": 16, "chunks_per_stream": 3,
+                        "straggler_factor": 10.0}), False),
+        ("quick chaos workload, chunk lost",
+         dict(chaos_base, chaos_zero_loss=False,
+              workload={"streams": 16, "chunks_per_stream": 3,
+                        "straggler_factor": 10.0}), True),
+    ]
+    fault_base = {"fallback_chunks": 2, "fallback_frames": 8,
+                  "fault_zero_loss": True, "fault_recovered": True,
+                  "workload": {"n": 10, "outage": [3, 6],
+                               "failure_threshold": 2}}
+    fault_cases = [
+        ("fault identical", dict(fault_base), False),
+        # exact gate: a one-chunk drift in either direction is a timing
+        # behaviour change even though it is "within 20%"
+        ("failover tripped one chunk late",
+         dict(fault_base, fallback_chunks=1, fallback_frames=4), True),
+        ("failover tripped one chunk early",
+         dict(fault_base, fallback_chunks=3, fallback_frames=12), True),
+        ("outage dropped chunks", dict(fault_base, fault_zero_loss=False),
+         True),
+        ("never recovered", dict(fault_base, fault_recovered=False), True),
+        ("quick fault workload, different count only",
+         dict(fault_base, fallback_chunks=1, fallback_frames=4,
+              workload={"n": 6, "outage": [2, 4],
+                        "failure_threshold": 2}), False),
+        ("quick fault workload, dropped chunks",
+         dict(fault_base, fault_zero_loss=False,
+              workload={"n": 6, "outage": [2, 4],
+                        "failure_threshold": 2}), True),
+    ]
     failures = 0
     for ref, suite in ((base, cases), (steady_base, steady_cases),
                        (shard_base, shard_cases),
-                       (tenancy_base, tenancy_cases)):
+                       (tenancy_base, tenancy_cases),
+                       (chaos_base, chaos_cases),
+                       (fault_base, fault_cases)):
         for name, fresh, want_fail in suite:
             _, bad = compare(ref, fresh, tolerance)
             got_fail = bool(bad)

@@ -7,7 +7,7 @@ The profiles are plain data: deployments override them with measured numbers.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -43,14 +43,41 @@ PROFILES: Dict[str, DeviceProfile] = {p.name: p for p in (CLIENT, FOG, CLOUD)}
 
 @dataclass
 class NetworkModel:
-    """Client/fog <-> cloud WAN and client <-> fog LAN links."""
+    """Client/fog <-> cloud WAN and client <-> fog LAN links.
+
+    Besides the binary ``up`` flag (Fig. 15's hard outage) the WAN link
+    supports *brownouts*: time windows during which bandwidth and/or RTT
+    degrade by a factor without the link going down.  Callers that pass
+    the simulated time ``t`` to :meth:`wan_time` get the degraded figure
+    inside an active window; callers that don't (or runs with no windows
+    scheduled) take the exact original arithmetic path, so attaching an
+    idle fault injector never perturbs a transfer time bitwise."""
     wan_mbps: float = 15.0       # paper micro-benchmark sweeps [10, 15, 20]
     wan_rtt_s: float = 0.04
     lan_mbps: float = 10000.0    # 10 Gbps co-located switch (paper testbed)
     lan_rtt_s: float = 0.001
     up: bool = True              # False simulates the Fig. 15 outage
+    # (t0, t1, bw_factor, rtt_factor) degradation windows: inside
+    # [t0, t1) effective bandwidth is wan_mbps * bw_factor and effective
+    # RTT is wan_rtt_s * rtt_factor.  Overlapping windows compound.
+    brownouts: List[Tuple[float, float, float, float]] = field(
+        default_factory=list)
 
-    def wan_time(self, nbytes: float) -> float:
+    def degradation(self, t: float) -> Tuple[float, float]:
+        """(bw_factor, rtt_factor) in effect at simulated time ``t``."""
+        bw, rtt = 1.0, 1.0
+        for t0, t1, bf, rf in self.brownouts:
+            if t0 <= t < t1:
+                bw *= bf
+                rtt *= rf
+        return bw, rtt
+
+    def wan_time(self, nbytes: float, t: Optional[float] = None) -> float:
+        if t is not None and self.brownouts:
+            bw, rtt = self.degradation(t)
+            if bw != 1.0 or rtt != 1.0:
+                return (self.wan_rtt_s * rtt
+                        + nbytes * 8.0 / (self.wan_mbps * bw * 1e6))
         return self.wan_rtt_s + nbytes * 8.0 / (self.wan_mbps * 1e6)
 
     def lan_time(self, nbytes: float) -> float:

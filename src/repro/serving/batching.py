@@ -78,7 +78,10 @@ class DetectRequest:
     downstream classify/transfer time).  ``weight`` is the stream's fair-
     queueing weight; ``not_before`` gates re-queued requests (a replica
     failure is only *detected* at the failure time, so the retry must not be
-    dispatched earlier on the simulated clock)."""
+    dispatched earlier on the simulated clock).  All hedge/requeue state
+    (``deadline``, ``not_before``, ``retries``) lives on the request object
+    itself, so a flush stolen or adopted across scheduler shards carries it
+    along untouched."""
     frames: Any                  # (F, H, W, 3) low-quality frames
     arrival: float               # simulated arrival time at the cloud
     stream: Any = None           # opaque owner handle (scheduler state)
@@ -86,6 +89,7 @@ class DetectRequest:
     deadline: Optional[float] = None   # absolute detect-complete deadline
     weight: float = 1.0                # WFQ weight (higher = more service)
     not_before: Optional[float] = None # earliest dispatch (requeue gate)
+    retries: int = 0                   # replica-failure requeue count
     vft: Optional[float] = None        # WFQ virtual finish time (set once)
     seq: int = -1                      # submit order (deterministic ties)
 

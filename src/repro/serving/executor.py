@@ -97,6 +97,22 @@ class Executor:
                                             f"{self.name}/dev{dev}"))
         return result, done
 
+    def occupy(self, fn_name: str, *, now: float,
+               model_time: float) -> Tuple[float, float]:
+        """Reserve device time without running a function.
+
+        Hedged dispatch books the speculative duplicate with this: the
+        duplicate occupies a real device (it shows up in utilization and
+        billing) but the primary's result is reused bitwise, so there is
+        nothing to execute.  Returns ``(start, completion_time)``."""
+        dev, start = self._acquire(now)
+        done = start + model_time
+        self.busy_until[dev] = done
+        self.clock = max(self.clock, done)
+        self.records.append(ExecutionRecord(fn_name, start, model_time,
+                                            f"{self.name}/dev{dev}"))
+        return start, done
+
     def utilization(self, horizon: float) -> float:
         if horizon <= 0:
             return 0.0

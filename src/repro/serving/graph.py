@@ -78,7 +78,8 @@ from repro.core.protocol import ChunkResult, HighLowProtocol
 from repro.serving.batching import (CrossStreamBatcher, DetectRequest,
                                     pack_frames, pack_frames_device)
 from repro.serving.executor import Executor
-from repro.serving.ingest import ArtifactStore, ClaimCheck, content_key
+from repro.serving.ingest import (ArtifactCorrupted, ArtifactStore,
+                                  ClaimCheck, content_key)
 from repro.serving.monitor import Monitor
 from repro.serving.registry import Dispatcher, FunctionRegistry, ModelZoo
 from repro.serving.router import Router
@@ -463,6 +464,7 @@ class GraphScheduler:
                  crop_buckets: Tuple[int, ...] = (4, 8, 16, 32, 64, 128),
                  max_retained_bundles: Optional[int] = 256,
                  fault=None, fallback_fn: Optional[Callable] = None,
+                 hedging: bool = True, hedge_slack: float = 0.1,
                  router: Optional[Router] = None,
                  seq_counter=None,
                  store: Optional[ArtifactStore] = None,
@@ -522,6 +524,26 @@ class GraphScheduler:
         self.plane = None
         self.fault = fault
         self.fallback_fn = fallback_fn
+        # --- chaos plane ---------------------------------------------------
+        # hedged dispatch: when the primary replica's service-rate EWMA says
+        # this sub-batch will straggle past the flush's detect deadline, a
+        # speculative duplicate is booked on the best alternate replica and
+        # whichever completion comes first wins.  The primary wins exact
+        # ties (same deterministic (t, seq) discipline as sharding) and the
+        # decision is gated on an attached fault schedule, so a fault-free
+        # or idle-injector run never hedges and stays bitwise-identical.
+        self.hedging = hedging
+        self.hedge_slack = hedge_slack
+        # flapped-replica readmission: health probes with exponential
+        # backoff, only for outages the injector marks transient
+        self.probe_base = 0.05
+        self.probe_max = 1.0
+        self._probing: set = set()
+        # reported unconditionally (zeros on fault-free runs) so plain and
+        # idle-injector throughput reports stay key-for-key identical
+        self.chaos_stats = {"hedges": 0, "hedge_wins": 0,
+                            "hedge_busy_s": 0.0, "probes": 0, "readmits": 0,
+                            "requeues": 0, "corruptions_repaired": 0}
         # estimate of the post-detect work (coords download + fog classify)
         # a chunk still faces; the detect deadline is the stream SLO minus
         # this.  Tracked as a fast-up/slow-down EWMA of observed values so
@@ -705,6 +727,8 @@ class GraphScheduler:
             self._arrive(t, **data)
         elif action == "flush":
             self._flush(t)
+        elif action == "probe":
+            self._probe(t, **data)
         else:
             self._finalize(t, data)
         self.sched_stats["events"] += 1
@@ -715,6 +739,21 @@ class GraphScheduler:
         """Drain the event queue (all submitted chunks reach finalize)."""
         while self.step():
             pass
+
+    def drain(self) -> None:
+        """Run to idle and assert the claim-check plane leaked nothing.
+
+        Every terminal path — normal dispatch, replica-failure requeue,
+        fog fallback, tenant pipelines — must have released its claims by
+        the time the event loop empties; a nonzero refcount here is a
+        leak, not a pending consumer."""
+        self.run_until_idle()
+        if self.store is not None:
+            leaked = self.store.live_refs()
+            if leaked:
+                raise AssertionError(
+                    f"claim-check leak: {len(leaked)} artifact(s) still "
+                    f"referenced at drain: {leaked}")
 
     # ------------------------------------------------------------------
     def _ingest(self, t: float, stream: StreamState, chunk,
@@ -747,7 +786,7 @@ class GraphScheduler:
         simulated times and ordering (same-time events pop in push order);
         ``float(enc.nbytes)`` stays the one unavoidable ingest-side read."""
         wan_bytes = float(enc.nbytes)
-        wan_up = self.network.wan_time(wan_bytes)
+        wan_up = self.network.wan_time(wan_bytes, t=t)
         arrival = t + qc + wan_up
         frames = (enc.frames if self.hot_path == "fused"
                   else np.asarray(enc.frames))
@@ -831,8 +870,15 @@ class GraphScheduler:
                     default_reqs.append(r)
                 else:
                     by_pipe.setdefault(pipe.name, (pipe, []))[1].append(r)
-            for pipe, group in by_pipe.values():
-                self._dispatch_tenant(t, group, pipe)
+            pipe_groups = list(by_pipe.values())
+            for gi, (pipe, group) in enumerate(pipe_groups):
+                try:
+                    self._dispatch_tenant(t, group, pipe)
+                except Exception:
+                    self._release_claims(
+                        [r for _, g in pipe_groups[gi + 1:] for r in g]
+                        + default_reqs, t)
+                    raise
             reqs = default_reqs
             if not reqs:
                 return
@@ -846,12 +892,33 @@ class GraphScheduler:
                 j = min(range(k), key=lambda i: (loads[i], i))
                 groups[j].append(r)
                 loads[j] += r.frames.shape[0]
-        for g in groups:
-            self._dispatch(t, g)
+        for gi, g in enumerate(groups):
+            try:
+                self._dispatch(t, g)
+            except Exception:
+                # terminal abort: sibling sub-batches of this flush were
+                # already popped from the batcher, so their claims die
+                # with it (drain() asserts refcounts return to zero)
+                self._release_claims([r for g2 in groups[gi + 1:]
+                                      for r in g2], t)
+                raise
+
+    def _release_claims(self, reqs: List[DetectRequest], t: float) -> None:
+        if self.store is None:
+            return
+        for r in reqs:
+            if isinstance(r.frames, ClaimCheck):
+                self.store.release(r.frames, now=t)
 
     def _fallback_batch(self, t: float, reqs: List[DetectRequest]) -> None:
         """No healthy replica survives: run each chunk on the fog detector."""
         if self.fallback_fn is None:
+            # terminal path: the flush dies here, so its claims must not
+            # outlive it (drain() asserts refcounts return to zero)
+            if self.store is not None:
+                for req in reqs:
+                    if isinstance(req.frames, ClaimCheck):
+                        self.store.release(req.frames, now=t)
             raise RuntimeError("no healthy replicas and no fog fallback")
         for req in reqs:
             if self.store is not None and isinstance(req.frames, ClaimCheck):
@@ -866,6 +933,20 @@ class GraphScheduler:
     def _dispatch(self, t: float, reqs: List[DetectRequest]) -> None:
         proto = self.graph.protocol
         m0 = time.perf_counter()
+        # artifact-corruption faults fire at flush assembly: flip stored
+        # payload bytes now, so the integrity-checked resolve below detects
+        # and repairs every one of them before it can reach the detector
+        if self.store is not None and self.fault is not None:
+            due_fn = getattr(self.fault, "due_corruptions", None)
+            if due_fn is not None:
+                keys, seen = [], set()
+                for r in reqs:
+                    if (isinstance(r.frames, ClaimCheck)
+                            and r.frames.key not in seen):
+                        seen.add(r.frames.key)
+                        keys.append(r.frames.key)
+                for i in range(due_fn(t, len(keys))):
+                    self.store.corrupt(keys[i])
         # pick a replica; health-check it against the fault schedule first
         # (the schedule is keyed by the replica's stable uid, not its pool
         # position — positions shift when the autoscaler resizes the pool)
@@ -876,8 +957,9 @@ class GraphScheduler:
                 return
             uid = self.router.replicas[idx].uid
             if self.fault is not None and self.fault.replica_down(uid, t):
-                self.router.mark_unhealthy(idx)
+                self.router.mark_unhealthy(idx, now=t)
                 self.fault.note_replica_failure(uid, t, requeued=0)
+                self._schedule_probe(uid, t)
                 continue
             break
         fused = self.hot_path == "fused"
@@ -886,7 +968,7 @@ class GraphScheduler:
         # array object straight through pack_frames_device, preserving the
         # zero-copy identity shortcut.
         if self.store is not None:
-            payloads = [self.store.get(r.frames) for r in reqs]
+            payloads = [self._resolve_payload(r, t) for r in reqs]
         else:
             payloads = [r.frames for r in reqs]
         if fused:
@@ -899,25 +981,37 @@ class GraphScheduler:
         n_frames = batch.shape[0]
         svc = proto.cloud.detect_time(n_frames)
         rep = self.router.replicas[idx]
-        fail_t = (self.fault.replica_fail_time(uid)
-                  if self.fault is not None else None)
+        est_start = max(t, min(rep.executor.busy_until))
+        if self.fault is not None:
+            # straggler windows stretch the true service time; flap/death
+            # windows interrupt it.  Both are keyed on where the service
+            # actually sits on the replica's device horizon, not on `t`.
+            mult = self.fault.service_multiplier(uid, est_start)
+            svc_eff = svc * mult if mult != 1.0 else svc
+            fail_t = self.fault.fail_time_in(uid, est_start,
+                                             est_start + svc_eff)
+        else:
+            svc_eff, fail_t = svc, None
         if fail_t is not None:
-            est_start = max(t, min(rep.executor.busy_until))
-            if fail_t < est_start + svc:
-                # the replica dies while this sub-batch is in service: its
-                # work is lost, the outage is detected at the failure time,
-                # and the chunks re-queue to surviving replicas (arrival and
-                # fair-queueing position preserved — nothing is dropped).
-                # Their claims were not released, so the re-flush resolves
-                # the same stored payloads again.
-                self.router.mark_unhealthy(idx)
-                self.fault.note_replica_failure(uid, fail_t,
-                                                requeued=len(reqs))
-                for r in reqs:
-                    r.not_before = fail_t
-                    self.batcher.submit(r)
-                self._push(fail_t, "flush", {})
-                return
+            # the replica dies (or flaps out) while this sub-batch is in
+            # service: its work is lost, the outage is detected at the
+            # failure time, and the chunks re-queue to surviving replicas
+            # (arrival and fair-queueing position preserved — nothing is
+            # dropped).  Their claims were not released, so the re-flush
+            # resolves the same stored payloads again.  A transient flap
+            # additionally starts a health-probe chain so the replica
+            # re-admits once its window closes.
+            self.router.mark_unhealthy(idx, now=fail_t)
+            self.fault.note_replica_failure(uid, fail_t,
+                                            requeued=len(reqs))
+            self.chaos_stats["requeues"] += len(reqs)
+            self._schedule_probe(uid, fail_t)
+            for r in reqs:
+                r.not_before = fail_t
+                r.retries += 1
+                self.batcher.submit(r)
+            self._push(fail_t, "flush", {})
+            return
         if self.store is not None:
             # dispatch is committed: the batch owns the frame data now, so
             # the claims drop and idle payloads age toward TTL eviction
@@ -928,36 +1022,184 @@ class GraphScheduler:
         queue_depth = self.batcher.pending_frames
         if self.cost_model is not None:
             self.cost_model.observe_pool(t, self.router.healthy_count())
+        # per-dispatch timeout = the flush's SLO slack (tightest pending
+        # detect deadline), and the hedge decision: a primary whose
+        # service-rate EWMA says this sub-batch will both straggle (beyond
+        # the slack threshold) and miss that deadline gets a speculative
+        # duplicate on the best alternate replica, first-result-wins
+        deadline = min((r.deadline for r in reqs if r.deadline is not None),
+                       default=None)
+        timeout = max(0.0, deadline - t) if deadline is not None else None
+        hedge = None
+        if (self.hedging and self.fault is not None
+                and deadline is not None and rep.rate_ewma is not None):
+            est_svc = rep.rate_ewma * n_frames
+            if (est_svc > svc * (1.0 + self.hedge_slack)
+                    and est_start + est_svc > deadline):
+                hedge = self._pick_hedge(t, idx, svc, n_frames,
+                                         est_start + est_svc)
         self.hot_path_stats["flushes"] += 1
         if fused:
-            self._dispatch_fused(t, reqs, slices, pad, batch, svc, idx,
-                                 queue_depth)
+            self._dispatch_fused(t, reqs, slices, pad, batch, svc_eff, idx,
+                                 queue_depth, timeout, hedge)
         else:
-            self._dispatch_sync(t, reqs, slices, pad, batch, svc, idx,
-                                queue_depth)
+            self._dispatch_sync(t, reqs, slices, pad, batch, svc_eff, idx,
+                                queue_depth, timeout, hedge)
+        # observed per-frame service rate feeds the next hedge decision;
+        # one-dispatch lag is the realistic detector dynamic (a straggler
+        # is spotted by its first slow completion, then hedged around)
+        obs = svc_eff / max(n_frames, 1)
+        rep.rate_ewma = (obs if rep.rate_ewma is None
+                         else 0.5 * rep.rate_ewma + 0.5 * obs)
         self.sched_stats["model_wall_s"] += time.perf_counter() - m0
+
+    def _resolve_payload(self, req: DetectRequest, t: float):
+        """Resolve one request's claim; repair a corrupted payload.
+
+        The store's content hash catches flipped bytes at flush assembly;
+        encoding is deterministic, so re-deriving from the source chunk
+        reconstructs the original payload bitwise (a forced re-put) and
+        the flush proceeds with zero garbage served.  The repair costs no
+        simulated time: it models the fog tier re-sending a chunk that is
+        still in its local buffer, which is dwarfed by the detect service
+        time already on the clock."""
+        try:
+            return self.store.get(req.frames)
+        except ArtifactCorrupted:
+            enc = self.graph._encode(req.meta["chunk"].frames)
+            fresh = (enc.frames if self.hot_path == "fused"
+                     else np.asarray(enc.frames))
+            self.store.repair(req.frames.key, fresh)
+            self.chaos_stats["corruptions_repaired"] += 1
+            self.monitor.log_event("artifact_repair", t=t,
+                                   key=req.frames.key)
+            return self.store.get(req.frames)
+
+    def _pick_hedge(self, t: float, primary: int, svc: float,
+                    n_frames: int, primary_est_done: float
+                    ) -> Optional[Tuple[int, float]]:
+        """Best alternate replica for a speculative duplicate, or None.
+
+        Deterministic: candidates are scored by estimated completion
+        (service-rate EWMA; nominal when unobserved) with uid as the
+        tie-break, and a candidate must beat the primary's estimate —
+        hedging onto an equally-slow pool only burns device time.
+        Replicas the fault schedule marks down, known-straggling, or
+        dying mid-hedge are skipped (the hedge must *cover* the fault,
+        not re-roll it).  Returns ``(pool_index, true_service_time)``."""
+        best = None
+        for i, r in enumerate(self.router.replicas):
+            if i == primary or not r.healthy:
+                continue
+            uid = r.uid
+            if self.fault.replica_down(uid, t):
+                continue
+            start = max(t, min(r.executor.busy_until))
+            mult = self.fault.service_multiplier(uid, start)
+            h_svc = svc * mult if mult != 1.0 else svc
+            if self.fault.fail_time_in(uid, start, start + h_svc) is not None:
+                continue
+            est_rate = (r.rate_ewma if r.rate_ewma is not None
+                        else svc / max(n_frames, 1))
+            if est_rate * n_frames > svc * (1.0 + self.hedge_slack):
+                continue                     # known straggler itself
+            est_done = start + est_rate * n_frames
+            if est_done >= primary_est_done - 1e-12:
+                continue                     # no expected win
+            if best is None or (est_done, uid) < best[:2]:
+                best = (est_done, uid, i, h_svc)
+        return None if best is None else (best[2], best[3])
+
+    def _route_detect(self, stage: str, args: tuple, *, t: float,
+                      svc: float, idx: int, queue_depth: int,
+                      timeout: Optional[float], hedge):
+        """Route the detect stage, optionally covered by a hedge.
+
+        The hedge duplicate books real device time on the alternate
+        replica (``Router.hedge``) but never re-runs the jit — the
+        primary's result is reused bitwise, only the completion-time race
+        differs.  The primary wins exact ties, so hedging can only move a
+        completion *earlier*.  Returns ``(out, done, svc_winner,
+        hedge_billed_svc_or_None)``."""
+        out, done, _ = self.router.route(stage, *args, now=t,
+                                         model_time=svc,
+                                         queue_depth=queue_depth,
+                                         replica=idx, timeout=timeout)
+        self._detect_windows.append((done - svc, svc))
+        h_billed = None
+        if hedge is not None:
+            h_idx, h_svc = hedge
+            h_start, h_done = self.router.hedge(h_idx, now=t,
+                                                model_time=h_svc)
+            self._detect_windows.append((h_start, h_svc))
+            self.chaos_stats["hedges"] += 1
+            self.chaos_stats["hedge_busy_s"] += h_svc
+            h_billed = h_svc
+            self.monitor.log_event("hedge", t=t, primary=idx,
+                                   alternate=h_idx, svc=svc,
+                                   hedge_svc=h_svc)
+            if h_done < done - 1e-12:
+                done, svc = h_done, h_svc
+                self.chaos_stats["hedge_wins"] += 1
+        return out, done, svc, h_billed
+
+    def _schedule_probe(self, uid: int, t: float) -> None:
+        """Start a health-probe chain for a transiently-down replica."""
+        if self.fault is None or uid in self._probing:
+            return
+        trans = getattr(self.fault, "transient", None)
+        if trans is None or not trans(uid, t):
+            return                    # permanent death: probing is wasted
+        self._probing.add(uid)
+        self._push(t + self.probe_base, "probe",
+                   dict(uid=uid, interval=self.probe_base))
+
+    def _probe(self, t: float, uid: int, interval: float) -> None:
+        """One health probe: re-admit the replica or back off and retry.
+
+        Backoff doubles up to ``probe_max`` so a long flap costs O(log)
+        probe events, not a busy-wait.  In sharded runs several shards may
+        run chains for the same uid; ``Router.readmit`` is idempotent and
+        the healthy check below retires duplicate chains, so the replica
+        re-admits exactly once."""
+        self.chaos_stats["probes"] += 1
+        idx = next((i for i, r in enumerate(self.router.replicas)
+                    if r.uid == uid), None)
+        if idx is None or self.router.replicas[idx].healthy:
+            self._probing.discard(uid)      # retired, or another shard won
+            return
+        if self.fault is not None and self.fault.replica_down(uid, t):
+            nxt = min(interval * 2.0, self.probe_max)
+            self._push(t + nxt, "probe", dict(uid=uid, interval=nxt))
+            return
+        self._probing.discard(uid)
+        if self.router.readmit(idx, now=t):
+            self.chaos_stats["readmits"] += 1
+            self.monitor.log_event("replica_readmit", t=t, replica=uid)
+        if len(self.batcher):
+            # backlog that piled up behind the outage flushes immediately
+            self._push(t, "flush", {})
 
     def _dispatch_sync(self, t: float, reqs: List[DetectRequest], slices,
                        pad: int, batch, svc: float, idx: int,
-                       queue_depth: int) -> None:
+                       queue_depth: int, timeout: Optional[float] = None,
+                       hedge=None) -> None:
         """Pre-fusion baseline: blocking detect, one ``split_uncertain``
         jit call plus two scalar device syncs per chunk, full-budget
         classify, immediate result materialization."""
         proto = self.graph.protocol
         n_frames = batch.shape[0]
         w0 = time.perf_counter()
-        det, done, _ = self.router.route(STAGE_DETECT, jnp.asarray(batch),
-                                         now=t, model_time=svc,
-                                         queue_depth=queue_depth,
-                                         replica=idx)
+        det, done, svc_w, h_billed = self._route_detect(
+            STAGE_DETECT, (jnp.asarray(batch),), t=t, svc=svc, idx=idx,
+            queue_depth=queue_depth, timeout=timeout, hedge=hedge)
         jax.block_until_ready(det)
         self.hot_path_stats["host_syncs"] += 1
         self.detect_stats["calls"] += 1
         self.detect_stats["frames"] += n_frames - pad
         self.detect_stats["padded_frames"] += pad
         self.detect_stats["wall_s"] += time.perf_counter() - w0
-        start = done - svc
-        self._detect_windows.append((start, svc))
+        start = done - svc_w
 
         for req, sl in zip(reqs, slices):
             det_i = {k: v[sl] for k, v in det.items()}
@@ -977,7 +1219,7 @@ class GraphScheduler:
                                else pcfg_req.theta_loc))
             split, coord_bytes = protocol_mod.split_uncertain(pcfg_req,
                                                               det_i)
-            wan_down = self.network.wan_time(float(coord_bytes))
+            wan_down = self.network.wan_time(float(coord_bytes), t=done)
             n_crops = int(np.sum(np.asarray(split.prop_valid)))
             self.hot_path_stats["host_syncs"] += 2   # the two scalar reads
             clf_time = proto.fog.classify_time(max(n_crops, 1))
@@ -1011,11 +1253,18 @@ class GraphScheduler:
                 self.cost_model.charge_cloud(
                     tname, frames=f, invocations=f,
                     busy_s=svc * f / max(n_frames - pad, 1), t=t)
+                if h_billed is not None:
+                    # a hedge is a real invocation: its duplicate device
+                    # time lands in the tenant's ledger either way the
+                    # race resolves
+                    self.cost_model.charge_hedge(
+                        tname, invocations=f,
+                        busy_s=h_billed * f / max(n_frames - pad, 1), t=t)
                 self.cost_model.charge_fog(tname, clf_time, t)
             lat = LatencyBreakdown(
                 quality_control=req.meta["qc"],
                 transmission=req.meta["wan_up"] + wan_down,
-                cloud_inference=svc,
+                cloud_inference=svc_w,
                 fog_inference=clf_time,
                 queue_wait=max(0.0, start - req.arrival) + fog_wait)
             res = protocol_mod.assemble_result(
@@ -1030,7 +1279,8 @@ class GraphScheduler:
 
     def _dispatch_fused(self, t: float, reqs: List[DetectRequest], slices,
                         pad: int, batch, svc: float, idx: int,
-                        queue_depth: int) -> None:
+                        queue_depth: int, timeout: Optional[float] = None,
+                        hedge=None) -> None:
         """Device-resident hot path: one fused detect+split dispatch, ONE
         blocking host read (the validity mask) per flush, one compacted
         cross-stream classify dispatch, and per-chunk results left as
@@ -1052,10 +1302,11 @@ class GraphScheduler:
                     tc[sl] = r.stream.theta_cls
                 if r.stream.theta_loc is not None:
                     tl[sl] = r.stream.theta_loc
-            split, done, _ = self.router.route(
-                STAGE_DETECT_SPLIT_DYN, batch, jnp.asarray(tc),
-                jnp.asarray(tl), now=t, model_time=svc,
-                queue_depth=queue_depth, replica=idx)
+            split, done, svc_w, h_billed = self._route_detect(
+                STAGE_DETECT_SPLIT_DYN,
+                (batch, jnp.asarray(tc), jnp.asarray(tl)), t=t, svc=svc,
+                idx=idx, queue_depth=queue_depth, timeout=timeout,
+                hedge=hedge)
         else:
             # donate the packed batch only when it is the dispatch-owned
             # multi-request concat; a single-request flush passes the
@@ -1063,9 +1314,9 @@ class GraphScheduler:
             stage = (STAGE_DETECT_SPLIT_DON
                      if self.donate_detect and len(reqs) > 1
                      else STAGE_DETECT_SPLIT)
-            split, done, _ = self.router.route(
-                stage, batch, now=t, model_time=svc,
-                queue_depth=queue_depth, replica=idx)
+            split, done, svc_w, h_billed = self._route_detect(
+                stage, (batch,), t=t, svc=svc, idx=idx,
+                queue_depth=queue_depth, timeout=timeout, hedge=hedge)
         # THE flush's single blocking device->host read: per-chunk coord
         # bytes, crop counts, and the compaction gather plan are all
         # derived from this one (F, N) bool mask on the host
@@ -1075,8 +1326,7 @@ class GraphScheduler:
         self.detect_stats["frames"] += n_frames - pad
         self.detect_stats["padded_frames"] += pad
         self.detect_stats["wall_s"] += time.perf_counter() - w0
-        start = done - svc
-        self._detect_windows.append((start, svc))
+        start = done - svc_w
 
         # detector padding rows carry no chunk: drop them before building
         # the gather plan (a zero-frame can still excite a random detector)
@@ -1158,7 +1408,7 @@ class GraphScheduler:
         for req, sl in zip(reqs, slices):
             n_crops = int(counts[sl].sum())
             coord_bytes = 9.0 * n_crops
-            wan_down = self.network.wan_time(coord_bytes)
+            wan_down = self.network.wan_time(coord_bytes, t=done)
             clf_time = proto.fog.classify_time(max(n_crops, 1))
             obs = wan_down + clf_time
             self._downstream_est = (obs if obs > self._downstream_est
@@ -1179,11 +1429,18 @@ class GraphScheduler:
                 self.cost_model.charge_cloud(
                     tname, frames=f, invocations=f,
                     busy_s=svc * f / max(f_real, 1), t=t)
+                if h_billed is not None:
+                    # a hedge is a real invocation: its duplicate device
+                    # time lands in the tenant's ledger either way the
+                    # race resolves
+                    self.cost_model.charge_hedge(
+                        tname, invocations=f,
+                        busy_s=h_billed * f / max(f_real, 1), t=t)
                 self.cost_model.charge_fog(tname, clf_time, t)
             lat = LatencyBreakdown(
                 quality_control=req.meta["qc"],
                 transmission=req.meta["wan_up"] + wan_down,
-                cloud_inference=svc,
+                cloud_inference=svc_w,
                 fog_inference=clf_time,
                 queue_wait=max(0.0, start - req.arrival) + fog_wait)
             res = LazyChunkResult(
@@ -1213,10 +1470,16 @@ class GraphScheduler:
         m0 = time.perf_counter()
         idx = self.router.pick()
         if idx is None:
+            # terminal path (tenant pipelines have no fog fallback): the
+            # claims must not outlive the flush that dies here
+            if self.store is not None:
+                for r in reqs:
+                    if isinstance(r.frames, ClaimCheck):
+                        self.store.release(r.frames, now=t)
             raise RuntimeError(
                 f"no healthy replicas for tenant pipeline {pipe.name!r}")
         if self.store is not None:
-            payloads = [self.store.get(r.frames) for r in reqs]
+            payloads = [self._resolve_payload(r, t) for r in reqs]
         else:
             payloads = [r.frames for r in reqs]
         batch, slices, pad = pack_frames_device(
@@ -1231,9 +1494,12 @@ class GraphScheduler:
         queue_depth = self.batcher.pending_frames
         if self.cost_model is not None:
             self.cost_model.observe_pool(t, self.router.healthy_count())
+        deadline = min((r.deadline for r in reqs if r.deadline is not None),
+                       default=None)
+        timeout = max(0.0, deadline - t) if deadline is not None else None
         out, done, _ = self.router.route(
             pipe.cloud_stage, batch, now=t, model_time=svc,
-            queue_depth=queue_depth, replica=idx)
+            queue_depth=queue_depth, replica=idx, timeout=timeout)
         start = done - svc
         self._detect_windows.append((start, svc))
         self.tenant_stats["flushes"] += 1
@@ -1246,7 +1512,7 @@ class GraphScheduler:
             f = req.frames.shape[0]
             out_sl = out[sl]
             coord_bytes = float(getattr(out_sl, "nbytes", 8 * f))
-            wan_down = self.network.wan_time(coord_bytes)
+            wan_down = self.network.wan_time(coord_bytes, t=done)
             fog_time = f / pipe.fog_fps
             result, done_c = stream.fog_exec.run(
                 pipe.fog_stage, chunk.frames, out_sl,
@@ -1520,6 +1786,10 @@ class GraphScheduler:
         # per-field lazy-result ledger: which result fields were actually
         # downloaded (a HITL-off run must never pay for fog_features)
         d["field_downloads"] = dict(self.field_downloads)
+        # chaos plane: emitted unconditionally (zeros on fault-free runs)
+        # so plain and idle-injector reports stay key-for-key identical
+        d.update({f"chaos_{k}": v for k, v in self.chaos_stats.items()})
+        d["chaos_route_timeouts"] = self.router.timeouts
         # simulated detect-stage makespan across the replica pool: with R
         # replicas the sub-batches overlap, so frames/span is the serving
         # plane's *capacity*, unlike frames/wall_s (one-CPU jit time)

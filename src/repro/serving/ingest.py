@@ -40,7 +40,22 @@ from typing import Any, Deque, Dict, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["ClaimCheck", "ArtifactStore", "content_key"]
+__all__ = ["ClaimCheck", "ArtifactStore", "ArtifactCorrupted",
+           "content_key"]
+
+
+class ArtifactCorrupted(RuntimeError):
+    """A stored payload no longer matches its content checksum.
+
+    Raised by :meth:`ArtifactStore.get` when ``integrity=True`` and the
+    payload bytes were flipped after publish (bit rot, a bad replica
+    write, or an injected chaos fault).  The caller owns recovery: the
+    graph scheduler re-derives the payload from the source chunk and
+    calls :meth:`ArtifactStore.repair` — garbage is never served."""
+
+    def __init__(self, key: str):
+        super().__init__(f"artifact {key!r} failed its integrity check")
+        self.key = key
 
 
 def content_key(host_bytes: Any, salt: str = "") -> str:
@@ -73,6 +88,11 @@ class ClaimCheck:
     nbytes: int
 
 
+def _payload_checksum(payload: Any) -> str:
+    """Content digest of a payload's host bytes (device arrays sync)."""
+    return content_key(np.asarray(payload))
+
+
 @dataclass
 class _Entry:
     payload: Any
@@ -83,6 +103,8 @@ class _Entry:
     # invalidates the old record)
     idle_since: float = 0.0
     idle_stamp: int = 0
+    # payload content digest at publish time (integrity mode only)
+    checksum: Optional[str] = None
 
 
 @dataclass
@@ -97,6 +119,12 @@ class ArtifactStore:
     # ``spill_bytes`` at the spill rate.  Referenced payloads are never
     # evicted; a fully-referenced over-capacity store tolerates the overflow.
     capacity_bytes: Optional[float] = None
+    # integrity mode: checksum payload bytes at publish and verify them at
+    # every resolve.  Opt-in because the digest forces a device->host read
+    # of the payload on the put/get path; with it on, a flipped byte
+    # surfaces as ArtifactCorrupted at flush assembly instead of garbage
+    # detections downstream.
+    integrity: bool = False
 
     _entries: Dict[str, _Entry] = field(default_factory=dict)
     # (expire_t, key, idle_stamp) records; lazily validated on sweep
@@ -114,6 +142,9 @@ class ArtifactStore:
         "bytes_peak": 0.0,
         "logical_bytes_current": 0.0,  # what the event heap would hold
         "logical_bytes_peak": 0.0,
+        "corruptions_injected": 0,    # bytes flipped (chaos injection)
+        "corruptions_detected": 0,    # checksum mismatches caught at get
+        "corruptions_repaired": 0,    # payloads re-derived via repair()
     })
 
     # -- publish ---------------------------------------------------------
@@ -136,6 +167,8 @@ class ArtifactStore:
         ent = self._entries.get(key)
         if ent is None:
             ent = _Entry(payload=payload, nbytes=int(nbytes))
+            if self.integrity:
+                ent.checksum = _payload_checksum(payload)
             self._entries[key] = ent
             self.stats["unique_puts"] += 1
             self.stats["bytes_current"] += ent.nbytes
@@ -172,13 +205,52 @@ class ArtifactStore:
 
     # -- resolve ---------------------------------------------------------
     def get(self, ref: ClaimCheck) -> Any:
-        """Resolve a claim to the stored payload object (no copy)."""
+        """Resolve a claim to the stored payload object (no copy).
+
+        In integrity mode the payload is re-digested and compared to the
+        publish-time checksum first; a mismatch raises
+        :class:`ArtifactCorrupted` so the caller can re-derive the bytes
+        from the source instead of serving garbage."""
         ent = self._entries.get(ref.key)
         if ent is None:
             raise KeyError(f"artifact {ref.key!r} not in store "
                            "(evicted while referenced?)")
+        if (self.integrity and ent.checksum is not None
+                and _payload_checksum(ent.payload) != ent.checksum):
+            self.stats["corruptions_detected"] += 1
+            raise ArtifactCorrupted(ref.key)
         self.stats["gets"] += 1
         return ent.payload
+
+    # -- integrity / chaos -----------------------------------------------
+    def corrupt(self, key: str) -> None:
+        """Flip the stored payload's bytes in place (chaos injection).
+
+        Models bit rot / a bad storage-tier write: the claim metadata and
+        refcounts are untouched, only the payload bytes change, so the
+        fault is invisible until an integrity-checked ``get``."""
+        ent = self._entries.get(key)
+        if ent is None:
+            raise KeyError(f"corrupt of absent artifact {key!r}")
+        arr = np.asarray(ent.payload).copy()
+        flat = arr.reshape(-1).view(np.uint8)
+        flat[: min(8, flat.size)] ^= 0xFF
+        ent.payload = arr
+        self.stats["corruptions_injected"] += 1
+
+    def repair(self, key: str, payload: Any) -> None:
+        """Replace a corrupted payload with a re-derived copy.
+
+        The caller re-derives the bytes from the source chunk (encoding
+        is deterministic, so the repaired payload is bitwise the
+        original); refcounts and expiry state carry over unchanged."""
+        ent = self._entries.get(key)
+        if ent is None:
+            raise KeyError(f"repair of absent artifact {key!r}")
+        ent.payload = payload
+        if self.integrity:
+            ent.checksum = _payload_checksum(payload)
+        self.stats["corruptions_repaired"] += 1
 
     def release(self, ref: ClaimCheck, now: float = 0.0) -> None:
         """Drop one claim; the payload becomes evictable once refs hit 0."""
@@ -216,6 +288,10 @@ class ArtifactStore:
     def refs(self, key: str) -> int:
         ent = self._entries.get(key)
         return ent.refs if ent is not None else 0
+
+    def live_refs(self) -> Dict[str, int]:
+        """Keys still holding claims — must be empty at ``drain()``."""
+        return {k: e.refs for k, e in self._entries.items() if e.refs > 0}
 
     def report(self) -> Dict[str, float]:
         out = dict(self.stats)

@@ -28,6 +28,11 @@ class Monitor:
     def events_of(self, name: str) -> List[dict]:
         return [e for e in self.events if e["event"] == name]
 
+    def event_count(self, name: str) -> int:
+        """Occurrences of a control-plane event (chaos gates count
+        failovers/readmits/repairs with this)."""
+        return len(self.events_of(name))
+
     def values(self, name: str) -> List[float]:
         return [v for _, v in self.series[name]]
 

@@ -35,6 +35,12 @@ class Replica:
     healthy: bool = True
     inflight: int = 0
     served: int = 0
+    # EWMA of observed per-frame service time; the scheduler's hedge
+    # decision compares it against the nominal profile rate to spot a
+    # straggling replica.  None until the first dispatch completes, and
+    # reset on re-admission — stale pre-outage load stats must not starve
+    # (or mis-hedge) a recovered replica.
+    rate_ewma: Optional[float] = None
 
 
 class Router:
@@ -67,14 +73,43 @@ class Router:
         self.cost_model = None
         self._queue: List[Tuple[str, tuple, dict, float]] = []
         self.clock = 0.0
+        self.timeouts = 0     # dispatches that exceeded their SLO timeout
 
     # ------------------------------------------------------------------
-    def mark_unhealthy(self, idx: int) -> None:
+    def mark_unhealthy(self, idx: int, now: Optional[float] = None) -> None:
+        """Fail a replica.  Passing ``now`` closes the keep-alive billing
+        interval at the failure time — a dead replica stops accruing
+        provisioned replica-seconds immediately, not at the next
+        ``scale_replicas`` sweep."""
         self.replicas[idx].healthy = False
         self.monitor.incr("health_check_failures")
+        if now is not None and self.cost_model is not None:
+            self.cost_model.observe_pool(now, self.healthy_count())
 
     def mark_healthy(self, idx: int) -> None:
         self.replicas[idx].healthy = True
+
+    def readmit(self, idx: int, now: float) -> bool:
+        """Bring a flapped replica back into rotation at simulated ``now``.
+
+        Load state accumulated before the outage is stale — inflight
+        counts, the service-rate EWMA, and device busy horizons all
+        describe a replica that no longer exists — so everything resets;
+        its devices come up free at ``now``.  Returns False if the
+        replica was already healthy (duplicate probe chains no-op)."""
+        rep = self.replicas[idx]
+        if rep.healthy:
+            return False
+        rep.healthy = True
+        rep.inflight = 0
+        rep.rate_ewma = None
+        ex = rep.executor
+        ex.busy_until = [now] * len(ex.busy_until)
+        ex.clock = max(ex.clock, now)
+        self.monitor.incr("replica_readmits")
+        if self.cost_model is not None:
+            self.cost_model.observe_pool(now, self.healthy_count())
+        return True
 
     def healthy_count(self) -> int:
         return sum(r.healthy for r in self.replicas)
@@ -142,14 +177,18 @@ class Router:
     def route(self, fn_name: str, *args, now: Optional[float] = None,
               model_time: Optional[float] = None,
               queue_depth: Optional[int] = None,
-              replica: Optional[int] = None, **kw):
+              replica: Optional[int] = None,
+              timeout: Optional[float] = None, **kw):
         """Dispatch one request; returns (result, completion_time, replica).
 
         ``queue_depth`` lets callers that maintain a real request queue
         (e.g. the cross-stream graph scheduler) feed the autoscaler the
         actual backlog instead of the per-replica busy-time heuristic.
         ``replica`` pins the request to a specific replica (the scheduler
-        uses this after its own pick + fault check)."""
+        uses this after its own pick + fault check).  ``timeout`` is the
+        flush's SLO slack: a dispatch whose completion exceeds
+        ``now + timeout`` is counted (the scheduler's hedging layer is
+        what actually covers the miss)."""
         now = self.clock if now is None else now
         self.clock = max(self.clock, now)
         idx = self.pick() if replica is None else replica
@@ -163,6 +202,9 @@ class Router:
         finally:
             rep.inflight -= 1
         rep.served += 1
+        if timeout is not None and done - now > timeout + 1e-12:
+            self.timeouts += 1
+            self.monitor.incr("route_timeouts")
         self.monitor.record("route_latency", done - now, now)
         self.monitor.incr(f"served_replica_{idx}")
         if self.autoscaler is not None:
@@ -187,6 +229,20 @@ class Router:
                 if target != rep.executor.num_devices:
                     rep.executor.scale_to(target)
         return result, done, idx
+
+    def hedge(self, idx: int, now: float, model_time: float
+              ) -> Tuple[float, float]:
+        """Book a speculative duplicate of an already-routed dispatch on
+        replica ``idx``: occupies real device time and counts as served
+        (a hedge is a real invocation) but does not re-run the function —
+        the primary's result is bitwise-reused, only the completion time
+        race differs.  Returns ``(start, done)``."""
+        rep = self.replicas[idx]
+        rep.served += 1
+        start, done = rep.executor.occupy("hedge", now=now,
+                                          model_time=model_time)
+        self.monitor.incr(f"served_replica_{idx}")
+        return start, done
 
     def load_report(self) -> Dict[str, float]:
         total = sum(r.served for r in self.replicas) or 1

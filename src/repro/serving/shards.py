@@ -62,10 +62,12 @@ _MAX_KEYS = frozenset((
     "healthy_replicas", "peak_devices", "peak_queue"))
 # keys identical on every shard (shared objects / config): the store,
 # cost model, and monitor are shared, so their rollups ("store_spills",
-# "cost", "tenants") must not be summed K times
+# "cost", "tenants") must not be summed K times.  The router is shared
+# too, so its timeout counter reports once; per-shard chaos_* counters
+# (hedges, probes, requeues, repairs) sum through the default branch.
 _FIRST_KEYS = frozenset(("hot_path", "replicas", "healthy_replicas",
                          "peak_devices", "peak_queue", "store_spills",
-                         "cost", "tenants"))
+                         "cost", "tenants", "chaos_route_timeouts"))
 
 
 class ShardedScheduler:
@@ -200,6 +202,17 @@ class ShardedScheduler:
     def run_until_idle(self) -> None:
         while self.step():
             pass
+
+    def drain(self) -> None:
+        """Run the merged loop to idle and assert the shared claim-check
+        store leaked nothing (same contract as ``GraphScheduler.drain``)."""
+        self.run_until_idle()
+        if self.store is not None:
+            leaked = self.store.live_refs()
+            if leaked:
+                raise AssertionError(
+                    f"claim-check leak: {len(leaked)} artifact(s) still "
+                    f"referenced at drain: {leaked}")
 
     # -- delegated control-plane operations -------------------------------
     def set_stream_thresholds(self, stream: str, **kw: Any) -> None:

@@ -270,7 +270,8 @@ class TenantChunkResult:
 # ---------------------------------------------------------------------------
 def _usage() -> Dict[str, float]:
     return {"frames": 0, "invocations": 0, "chunks": 0,
-            "cloud_busy_s": 0.0, "fog_busy_s": 0.0, "egress_bytes": 0.0}
+            "cloud_busy_s": 0.0, "fog_busy_s": 0.0, "egress_bytes": 0.0,
+            "hedge_invocations": 0, "hedge_busy_s": 0.0}
 
 
 class CostModel:
@@ -315,6 +316,21 @@ class CostModel:
         u["frames"] += int(frames)
         u["invocations"] += int(invocations)
         u["cloud_busy_s"] += float(busy_s)
+
+    def charge_hedge(self, tenant: str, *, invocations: int, busy_s: float,
+                     t: float) -> None:
+        """Bill a hedged dispatch's speculative duplicate.
+
+        A hedge is a real invocation occupying real device time whether or
+        not it wins the race, so it flows into the same ``invocations`` /
+        ``cloud_busy_s`` pools the pricing lines bill from (conservation
+        holds with no special case); the ``hedge_*`` counters keep the
+        robustness spend separately visible in :meth:`cost_report`."""
+        u = self._u(tenant)
+        u["invocations"] += int(invocations)
+        u["cloud_busy_s"] += float(busy_s)
+        u["hedge_invocations"] += int(invocations)
+        u["hedge_busy_s"] += float(busy_s)
 
     def charge_fog(self, tenant: str, busy_s: float, t: float) -> None:
         self._u(tenant)["fog_busy_s"] += float(busy_s)
@@ -397,6 +413,10 @@ class CostModel:
                 "cloud_busy_s": u["cloud_busy_s"],
                 "fog_busy_s": u["fog_busy_s"],
                 "egress_bytes": u["egress_bytes"],
+                # robustness spend, already priced inside cloud_busy_cost /
+                # invoke_cost above — informational split, not an extra line
+                "hedge_invocations": int(u["hedge_invocations"]),
+                "hedge_busy_s": u["hedge_busy_s"],
                 "cost_per_mframes": (total / (u["frames"] / 1e6)
                                      if u["frames"] else 0.0),
             })
