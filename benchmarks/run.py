@@ -40,6 +40,8 @@ BENCHES = [
     ("tenancy", "benchmarks.bench_tenancy"),
     # also emits machine-readable artifacts/BENCH_chaos.json
     ("chaos", "benchmarks.bench_chaos"),
+    # also emits machine-readable artifacts/BENCH_coldstart.json
+    ("coldstart", "benchmarks.bench_coldstart"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline_table"),
 ]

@@ -65,6 +65,21 @@ Gated metrics:
   * ``corruption_recovered_all``    — hard gate: every injected artifact
     corruption must be detected by the store's content hash and repaired
     by re-derivation, with results bitwise equal to the fault-free run.
+  * ``coldstart_p99_ratio``         — cold-start bench: predictive
+    warm-pool tail p99 over always-cold p99 under bursty diurnal
+    traffic, lower is better; workload-matched (the ratio is defined by
+    the burst shape and cold_start_s).
+  * ``warmpool_usd_ratio``          — predictive warm-pool ledger $ over
+    always-warm $, lower is better; workload-matched.
+  * ``warmpool_p99_beats_cold``     — hard gate: prewarming must beat the
+    scale-to-zero extreme on tail latency.
+  * ``warmpool_cost_beats_warm``    — hard gate: prediction must bill less
+    than pinning the pool at max.
+  * ``warmpool_attainment_ok``      — hard gate: the predictive policy may
+    not attain less SLO than either provisioning extreme.
+  * ``warmpool_bit_identical``      — hard gate: with prewarming disabled
+    the serving plane must stay bitwise-identical to the policy-free
+    plane at 1 and K shards.
   * ``fallback_chunks`` / ``fallback_frames`` — Fig. 15 fog-fallback
     absorption, gated EXACTLY when workloads match: the mode timeline is
     deterministic, so any drift means heartbeat detection timing changed.
@@ -168,6 +183,8 @@ def compare(baseline: Dict, fresh: Dict, tolerance: float
     gate("cost_per_mframes", higher_better=False, workload_bound=True)
     gate("slo_attainment", higher_better=True, workload_bound=True)
     gate("hedge_p99_ratio", higher_better=False, workload_bound=True)
+    gate("coldstart_p99_ratio", higher_better=False, workload_bound=True)
+    gate("warmpool_usd_ratio", higher_better=False, workload_bound=True)
     exact_gate("fallback_chunks")
     exact_gate("fallback_frames")
     if "bit_identical" in fresh and not fresh["bit_identical"]:
@@ -202,6 +219,24 @@ def compare(baseline: Dict, fresh: Dict, tolerance: float
         bad.append("REGRESSION corruption_recovered_all: an injected "
                    "artifact corruption was served or lost instead of "
                    "detected-and-re-derived")
+    if ("warmpool_p99_beats_cold" in fresh
+            and not fresh["warmpool_p99_beats_cold"]):
+        bad.append("REGRESSION warmpool_p99_beats_cold: predictive "
+                   "prewarming no longer beats always-cold provisioning "
+                   "on tail latency (cold start back on the critical path)")
+    if ("warmpool_cost_beats_warm" in fresh
+            and not fresh["warmpool_cost_beats_warm"]):
+        bad.append("REGRESSION warmpool_cost_beats_warm: the predictive "
+                   "warm pool no longer bills less than always-warm "
+                   "provisioning")
+    if ("warmpool_attainment_ok" in fresh
+            and not fresh["warmpool_attainment_ok"]):
+        bad.append("REGRESSION warmpool_attainment_ok: the predictive "
+                   "policy attains less SLO than a provisioning extreme")
+    if ("warmpool_bit_identical" in fresh
+            and not fresh["warmpool_bit_identical"]):
+        bad.append("REGRESSION warmpool_bit_identical: the prewarm-off "
+                   "plane diverged from the policy-free scheduler")
     if "fault_zero_loss" in fresh and not fresh["fault_zero_loss"]:
         bad.append("REGRESSION fault_zero_loss: the WAN outage dropped "
                    "chunks instead of absorbing them on the fog fallback")
@@ -329,6 +364,37 @@ def self_test(tolerance: float) -> int:
               workload={"streams": 16, "chunks_per_stream": 3,
                         "straggler_factor": 10.0}), True),
     ]
+    coldstart_base = {"coldstart_p99_ratio": 0.55,
+                      "warmpool_usd_ratio": 0.6,
+                      "warmpool_p99_beats_cold": True,
+                      "warmpool_cost_beats_warm": True,
+                      "warmpool_attainment_ok": True,
+                      "warmpool_bit_identical": True,
+                      "workload": {"streams": 12, "bursts": 6,
+                                   "cold_start_s": 0.6}}
+    coldstart_cases = [
+        ("coldstart identical", dict(coldstart_base), False),
+        ("p99 ratio crept up",
+         dict(coldstart_base, coldstart_p99_ratio=0.75), True),
+        ("usd ratio crept up",
+         dict(coldstart_base, warmpool_usd_ratio=0.85), True),
+        ("prewarming lost to always-cold",
+         dict(coldstart_base, warmpool_p99_beats_cold=False), True),
+        ("prediction pricier than pinning",
+         dict(coldstart_base, warmpool_cost_beats_warm=False), True),
+        ("attainment regressed",
+         dict(coldstart_base, warmpool_attainment_ok=False), True),
+        ("prewarm-off diverged",
+         dict(coldstart_base, warmpool_bit_identical=False), True),
+        ("quick coldstart workload, bad ratio only",
+         dict(coldstart_base, coldstart_p99_ratio=0.95,
+              workload={"streams": 8, "bursts": 5,
+                        "cold_start_s": 0.6}), False),
+        ("quick coldstart workload, prewarm-off diverged",
+         dict(coldstart_base, warmpool_bit_identical=False,
+              workload={"streams": 8, "bursts": 5,
+                        "cold_start_s": 0.6}), True),
+    ]
     fault_base = {"fallback_chunks": 2, "fallback_frames": 8,
                   "fault_zero_loss": True, "fault_recovered": True,
                   "workload": {"n": 10, "outage": [3, 6],
@@ -358,6 +424,7 @@ def self_test(tolerance: float) -> int:
                        (shard_base, shard_cases),
                        (tenancy_base, tenancy_cases),
                        (chaos_base, chaos_cases),
+                       (coldstart_base, coldstart_cases),
                        (fault_base, fault_cases)):
         for name, fresh, want_fail in suite:
             _, bad = compare(ref, fresh, tolerance)

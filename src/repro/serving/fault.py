@@ -32,7 +32,14 @@ all on the simulated clock:
 The base :class:`FaultTolerantCoordinator` keeps the original two-domain
 behaviour and API; the scheduler calls the generalized queries
 (``fail_time_in``, ``service_multiplier``) which degrade to the old
-semantics on the base class, so existing runs stay bitwise-identical."""
+semantics on the base class, so existing runs stay bitwise-identical.
+
+Every replica-level domain is keyed by the router's *stable uid*, so
+warm-pool prewarmed replicas (spun up ahead of forecast demand with
+``ready_at`` in the future) are first-class fault-injection targets: a
+flap scheduled on a prewarmed uid interrupts its spin-up, and
+``Router.readmit`` resumes the *remaining* spin-up on recovery rather
+than granting a free warm start."""
 from __future__ import annotations
 
 import bisect
@@ -200,6 +207,14 @@ class FaultInjector(FaultTolerantCoordinator):
             if down < end and up > start:
                 onsets.append(down)
         return min(onsets) if onsets else None
+
+    def down_until(self, uid: int, now: float) -> Optional[float]:
+        """End of the flap window covering ``now`` for ``uid``, or ``None``
+        if the replica is up (or permanently dead — no recovery time)."""
+        for down, up in self.flap_windows.get(uid, ()):
+            if down <= now < up:
+                return up
+        return None
 
     def transient(self, uid: int, now: float) -> bool:
         """True when the outage observed at ``now`` will recover (a flap

@@ -471,7 +471,8 @@ class GraphScheduler:
                  pick_policy: str = "least",
                  cost_model=None,
                  fog_queueing: bool = False,
-                 hitl_cost_s: float = 0.0):
+                 hitl_cost_s: float = 0.0,
+                 warm_pool=None):
         assert hot_path in ("fused", "sync")
         proto = graph.protocol
         self.graph = graph
@@ -639,6 +640,18 @@ class GraphScheduler:
             cost_model.observe_pool(0.0, self.router.healthy_count())
         self.fog_queueing = fog_queueing
         self.hitl_cost_s = hitl_cost_s
+        # --- warm-pool management plane (autoscaler.WarmPoolPolicy) --------
+        # every arrival feeds the policy's per-tenant forecasters; the
+        # policy schedules "warm" check events (shed after a burst drains,
+        # prewarm ahead of the next predicted burst) so cold starts land
+        # off the critical path.  None, or an attached-but-disabled policy,
+        # schedules nothing — the event timeline stays bitwise-identical
+        # to the policy-free scheduler (bench_coldstart gates this at 1
+        # and K shards).  Sharded runs share ONE policy instance (like the
+        # router); warm_stats is per-shard and sums in the merged report.
+        self.warm_pool = warm_pool
+        self.warm_stats = {"prewarm_events": 0, "replicas_prewarmed": 0,
+                           "shed_events": 0, "spinup_replica_s": 0.0}
         # custom-pipeline dispatch ledger, kept apart from hot_path_stats so
         # tenant flushes never skew host-syncs-per-flush style ratios
         self.tenant_stats = {"flushes": 0, "chunks": 0, "frames": 0}
@@ -729,6 +742,8 @@ class GraphScheduler:
             self._flush(t)
         elif action == "probe":
             self._probe(t, **data)
+        elif action == "warm":
+            self._warm_check(t)
         else:
             self._finalize(t, data)
         self.sched_stats["events"] += 1
@@ -811,6 +826,14 @@ class GraphScheduler:
         nd = self.batcher.next_deadline()
         if nd is not None and nd > arrival + 1e-12:
             self._push(nd, "flush", {})
+        if self.warm_pool is not None:
+            # feed the per-tenant arrival forecaster and (when the policy
+            # is enabled) keep a warm-pool check event scheduled; a
+            # disabled policy observes but never schedules, leaving the
+            # event timeline untouched
+            self.warm_pool.observe(t, chunk.frames.shape[0],
+                                   self._tenant_name(stream))
+            self._schedule_warm_check(t)
 
     def _artifact_key(self, chunk) -> str:
         """Content address of a chunk's encoded payload.
@@ -1179,6 +1202,46 @@ class GraphScheduler:
         if len(self.batcher):
             # backlog that piled up behind the outage flushes immediately
             self._push(t, "flush", {})
+
+    # -- warm-pool plane ------------------------------------------------
+    def _schedule_warm_check(self, now: float) -> None:
+        """Ask the warm-pool policy when it next wants to act and book a
+        ``warm`` event there.  The policy deduplicates (at most one
+        outstanding check, bounded fires per observation epoch), so the
+        chain self-terminates once traffic stops and ``run_until_idle``
+        always drains."""
+        pol = self.warm_pool
+        if pol is None or not pol.enabled:
+            return
+        ft = pol.next_check(now)
+        if ft is not None:
+            self._push(ft, "warm", {})
+
+    def _warm_check(self, t: float) -> None:
+        """One warm-pool actuation: prewarm ahead of a forecast burst or
+        shed idle keep-alive replicas past the break-even horizon.  Runs
+        off the data path — the spin-up happens *before* the burst lands,
+        which is the whole point."""
+        pol = self.warm_pool
+        pol.fired()
+        target = pol.target_replicas(t)
+        cur = self.router.healthy_count()
+        if target > cur:
+            self.router.scale_replicas(target, now=t, prewarm=True)
+            added = self.router.healthy_count() - cur
+            if added > 0:
+                self.warm_stats["prewarm_events"] += 1
+                self.warm_stats["replicas_prewarmed"] += added
+                self.warm_stats["spinup_replica_s"] += (
+                    added * self.router.cold_start_s)
+                if self.cost_model is not None:
+                    self.cost_model.note_prewarm(
+                        t, added, self.router.cold_start_s)
+        elif target < cur:
+            self.router.scale_replicas(target, now=t)
+            if self.router.healthy_count() < cur:
+                self.warm_stats["shed_events"] += 1
+        self._schedule_warm_check(t)
 
     def _dispatch_sync(self, t: float, reqs: List[DetectRequest], slices,
                        pad: int, batch, svc: float, idx: int,
@@ -1790,6 +1853,8 @@ class GraphScheduler:
         # so plain and idle-injector reports stay key-for-key identical
         d.update({f"chaos_{k}": v for k, v in self.chaos_stats.items()})
         d["chaos_route_timeouts"] = self.router.timeouts
+        # warm-pool plane: same unconditional-zeros discipline as chaos_*
+        d.update({f"warm_{k}": v for k, v in self.warm_stats.items()})
         # simulated detect-stage makespan across the replica pool: with R
         # replicas the sub-batches overlap, so frames/span is the serving
         # plane's *capacity*, unlike frames/wall_s (one-CPU jit time)

@@ -35,6 +35,13 @@ class Replica:
     healthy: bool = True
     inflight: int = 0
     served: int = 0
+    # serverless spin-up state: a replica is COLD (spinning up) until the
+    # simulated clock reaches ready_at, WARM after.  Initial replicas are
+    # warm from t=0; scale-up/prewarm sets ready_at = now + cold_start_s.
+    # A spinning replica is healthy and routable — its devices are just
+    # busy until ready_at — so it participates in hedging and fault
+    # handling like any other pool member.
+    ready_at: float = 0.0
     # EWMA of observed per-frame service time; the scheduler's hedge
     # decision compares it against the nominal profile rate to spot a
     # straggling replica.  None until the first dispatch completes, and
@@ -104,7 +111,11 @@ class Router:
         rep.inflight = 0
         rep.rate_ewma = None
         ex = rep.executor
-        ex.busy_until = [now] * len(ex.busy_until)
+        # a replica flapped *mid-spin-up* was never warm: re-admission
+        # resumes the remaining spin-up (devices free at ready_at), it
+        # does not skip it.  Warm replicas (ready_at <= now) come up free
+        # at `now` exactly as before.
+        ex.busy_until = [max(now, rep.ready_at)] * len(ex.busy_until)
         ex.clock = max(ex.clock, now)
         self.monitor.incr("replica_readmits")
         if self.cost_model is not None:
@@ -113,6 +124,17 @@ class Router:
 
     def healthy_count(self) -> int:
         return sum(r.healthy for r in self.replicas)
+
+    def warm_count(self, now: float) -> int:
+        """Healthy replicas whose spin-up has completed at ``now``."""
+        return sum(r.healthy and r.ready_at <= now + 1e-12
+                   for r in self.replicas)
+
+    def spinning_count(self, now: float) -> int:
+        """Healthy replicas still inside their spin-up window at ``now``
+        (spin-up-in-progress — provisioned, billed, but not warm yet)."""
+        return sum(r.healthy and r.ready_at > now + 1e-12
+                   for r in self.replicas)
 
     def pick(self) -> Optional[int]:
         healthy = [i for i, r in enumerate(self.replicas) if r.healthy]
@@ -132,14 +154,18 @@ class Router:
 
     # ------------------------------------------------------------------
     def scale_replicas(self, target: int,
-                       now: Optional[float] = None) -> None:
+                       now: Optional[float] = None,
+                       prewarm: bool = False) -> None:
         """Grow/shrink the pool to ``target`` *healthy* replicas
         (``scale_unit="replicas"``): dead replicas hold no capacity, so
         they are swept out first and never counted toward the target.
 
         A replica added at simulated ``now`` models serverless container
         spin-up: its devices come up busy until ``now + cold_start_s``
-        instead of free-at-t=0."""
+        instead of free-at-t=0.  ``prewarm=True`` tags the additions as
+        warm-pool prewarms (the :class:`WarmPoolPolicy` spinning replicas
+        up *ahead* of forecast demand, so they are warm when it lands) —
+        the mechanics are identical, only the monitoring differs."""
         target = max(1, target)
         now = self.clock if now is None else now
         for i in range(len(self.replicas) - 1, 0, -1):
@@ -155,8 +181,12 @@ class Router:
             ready_at = now + self.cold_start_s
             ex.clock = max(ex.clock, now)
             ex.busy_until = [ready_at] * len(ex.busy_until)
-            self.replicas.append(Replica(ex, uid=uid))
+            self.replicas.append(Replica(ex, uid=uid, ready_at=ready_at))
             self.monitor.incr("replicas_added")
+            if prewarm:
+                self.monitor.incr("replicas_prewarmed")
+                self.monitor.record("replica_prewarm", self.cold_start_s,
+                                    now)
             if self.cold_start_s > 0:
                 self.monitor.record("replica_cold_start", self.cold_start_s,
                                     now)

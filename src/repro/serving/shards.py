@@ -23,7 +23,13 @@ Shared across shards:
   any shard dedup against the same content-addressed payloads),
 * the :class:`~repro.serving.monitor.Monitor` (series from all shards land
   in one place — the "merged monitor" is shared, not reconciled later),
-* the event-sequence counter (global deterministic tie-break).
+* the event-sequence counter (global deterministic tie-break),
+* the warm-pool policy (one
+  :class:`~repro.serving.autoscaler.WarmPoolPolicy` instance passed to
+  every shard: arrival observations from all shards feed one forecast,
+  and its at-most-one-outstanding-check dedup is therefore global — the
+  shared pool is prewarmed once, not once per shard).  Its ``warm_*``
+  report counters sum across shards like any other counter.
 
 **Work stealing:** before stepping a shard that is about to flush, the
 merged loop checks whether more requests are due there than one flush can

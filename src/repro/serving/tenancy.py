@@ -294,6 +294,13 @@ class CostModel:
         # scale events and by the scheduler on dispatch — integrated
         # last-observation-carried-forward at report time
         self.pool_trace: List[Tuple[float, int]] = []
+        # warm-pool prewarm spin-ups (scheduler's _warm_check): the
+        # replica-seconds spent spinning up ahead of forecast demand.
+        # Informational split like hedge_* — the time is already inside
+        # the provisioned-pool integral, so pricing it here again would
+        # break conservation; prewarm_cost below is the slice of the
+        # keep-alive line attributable to prewarming, not a new line.
+        self.prewarm: Dict[str, float] = {"spinups": 0, "replica_s": 0.0}
 
     # -- registration ----------------------------------------------------
     def register(self, spec: TenantSpec) -> TenantSpec:
@@ -343,6 +350,12 @@ class CostModel:
 
     def observe_pool(self, t: float, healthy: int) -> None:
         self.pool_trace.append((float(t), int(healthy)))
+
+    def note_prewarm(self, t: float, replicas: int, spinup_s: float) -> None:
+        """Record a warm-pool prewarm actuation: ``replicas`` spun up at
+        ``t``, each paying ``spinup_s`` of cold start off the data path."""
+        self.prewarm["spinups"] += int(replicas)
+        self.prewarm["replica_s"] += float(replicas) * float(spinup_s)
 
     def close(self, t: float) -> None:
         """Final pool observation at the end of the simulated run."""
@@ -434,6 +447,13 @@ class CostModel:
             "idle_cost": idle_cost,
             "spill_bytes": spill_bytes,
             "spill_cost": spill_cost,
+            # warm-pool prewarming: informational split of the keep-alive
+            # line (the spin-up replica-seconds are inside the provisioned
+            # integral already — hedge_* pattern, conservation untouched)
+            "prewarm_spinups": int(self.prewarm["spinups"]),
+            "prewarm_replica_s": self.prewarm["replica_s"],
+            "prewarm_cost": (self.prewarm["replica_s"]
+                             * self.rates.cloud_replica_s),
         })
         return out
 
